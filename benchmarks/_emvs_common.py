@@ -1,0 +1,48 @@
+"""Shared benchmark scaffolding: the four evaluation sequences of the
+paper (simulation_3planes, simulation_3walls, slider_close, slider_far)
+at a size that runs in seconds on CPU."""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+
+from repro.core.camera import CameraModel
+from repro.core.dsi import DSIConfig
+from repro.core.geometry import SE3
+from repro.core.pipeline import EMVSOptions, process_segment
+from repro.events.aggregation import aggregate
+from repro.events.simulator import (
+    SceneConfig,
+    absrel,
+    ground_truth_depth,
+    make_scene,
+    make_trajectory,
+    simulate_events,
+)
+
+SEQUENCES = ("simulation_3planes", "simulation_3walls", "slider_close",
+             "slider_far")
+
+
+@lru_cache(maxsize=None)
+def sequence(name: str, points_per_plane: int = 400, steps: int = 48):
+    cam = CameraModel()
+    scene = make_scene(SceneConfig(name=name, points_per_plane=points_per_plane))
+    traj = make_trajectory(name, steps)
+    ev = simulate_events(cam, scene, traj, noise_fraction=0.02, seed=0)
+    frames = aggregate(cam, ev, traj, events_per_frame=1024)
+    z_rng = (0.5, 1.8) if name == "slider_close" else (0.6, 4.5)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=64, z_min=z_rng[0],
+                                   z_max=z_rng[1])
+    return cam, scene, frames, dsi_cfg
+
+
+def absrel_for(name: str, opts: EMVSOptions, max_frames: int = 24) -> float:
+    cam, scene, frames, dsi_cfg = sequence(name)
+    frames = jax.tree.map(lambda a: a[:max_frames], frames)
+    T_w_ref = SE3(frames.poses.R[0], frames.poses.t[0])
+    _, dm = process_segment(cam, dsi_cfg, frames, T_w_ref, opts)
+    gt, gtm = ground_truth_depth(cam, scene, T_w_ref)
+    return float(absrel(dm.depth, dm.mask, gt, gtm))

@@ -1,0 +1,42 @@
+"""Roofline report: renders the dry-run sweep (results/dryrun) into the
+EXPERIMENTS.md §Roofline table. Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.summarize_dryrun import HEADER, fmt_row, load
+
+DEFAULT_DIR = "results/dryrun"
+
+
+def run(out_dir: str = DEFAULT_DIR) -> dict:
+    if not os.path.isdir(out_dir):
+        return {"error": f"no dry-run results in {out_dir}; run the sweep first",
+                "rows": []}
+    recs = load(out_dir)
+    compiled = [r for r in recs if "skipped" not in r]
+    doms = {}
+    for r in compiled:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    return {"rows": recs, "n": len(recs), "n_compiled": len(compiled),
+            "dominant_histogram": doms}
+
+
+def main() -> None:
+    out = run()
+    if "error" in out:
+        print(out["error"])
+        return
+    print("== Roofline (from the 512-device dry-run artifacts) ==")
+    print(HEADER)
+    for r in out["rows"]:
+        print(fmt_row(r))
+    print(f"\n{out['n']} cells ({out['n_compiled']} compiled); dominant-term "
+          f"histogram: {out['dominant_histogram']}")
+
+
+if __name__ == "__main__":
+    main()

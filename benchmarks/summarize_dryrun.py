@@ -1,0 +1,50 @@
+"""Summarize dry-run JSON records into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    tag = f"{r['arch']} × {r['cell']} × {r['mesh']}"
+    if "skipped" in r:
+        return f"| {tag} | SKIP: {r['skipped'][:60]} |||||||"
+    rf = r["roofline"]
+    mem = r["memory"].get("temp_bytes")
+    mem_gb = f"{mem/2**30:.1f}" if isinstance(mem, (int, float)) else "?"
+    frac = max(rf["compute_s"], 1e-12) / max(
+        rf["compute_s"], rf["memory_s"], rf["collective_s"], 1e-12)
+    return (f"| {tag} | {rf['flops']:.2e} | {rf['compute_s']:.3f} "
+            f"| {rf['memory_s']:.3f} | {rf['collective_s']:.3f} "
+            f"| {rf['dominant']} | {rf['useful_fraction']:.2f} | {frac:.2f} "
+            f"| {mem_gb} | {r['compile_s']:.0f}s |")
+
+
+HEADER = ("| cell | HLO flops/dev | compute s | memory s | collective s "
+          "| dominant | useful | roofline-frac | temp GiB | compile |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(out_dir)
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    done = [r for r in recs if "skipped" not in r]
+    print(f"\n{len(recs)} records, {len(done)} compiled, "
+          f"{len(recs) - len(done)} skipped")
+
+
+if __name__ == "__main__":
+    main()

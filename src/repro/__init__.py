@@ -1,0 +1,13 @@
+"""repro: Eventor (event-based monocular multi-view stereo) on TPU, in JAX.
+
+A production-grade training/inference framework reproducing and extending
+
+    "Eventor: An Efficient Event-Based Monocular Multi-View Stereo
+     Accelerator on FPGA Platform" (Li et al., 2022)
+
+with a TPU-native reformulation of the event back-projection (P) and
+volumetric ray-counting (R) stages, plus a multi-architecture LM substrate
+sharing the same distributed runtime. See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Config module for --arch jamba-1.5-large-398b (see configs/archs.py)."""
+from repro.configs import get_config
+
+ARCH_ID = "jamba-1.5-large-398b"
+CONFIG = get_config(ARCH_ID)

@@ -1,0 +1,5 @@
+"""Config module for --arch musicgen-large (see configs/archs.py)."""
+from repro.configs import get_config
+
+ARCH_ID = "musicgen-large"
+CONFIG = get_config(ARCH_ID)

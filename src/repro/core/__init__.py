@@ -1,0 +1,5 @@
+"""EMVS core: the paper's algorithm as a composable JAX module."""
+
+from repro.core.camera import CameraModel  # noqa: F401
+from repro.core.dsi import DSIConfig  # noqa: F401
+from repro.core.pipeline import EMVSOptions, EMVSResult, run_emvs  # noqa: F401

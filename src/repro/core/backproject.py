@@ -1,0 +1,66 @@
+"""Event back-projection (P): P(Z0) + P(Z0 -> Zi).
+
+Pure-JAX reference path. The fused Pallas kernel in
+`repro.kernels.backproject_vote` implements the same math tiled for VMEM;
+tests assert allclose between the two.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import CameraModel
+from repro.core.geometry import (
+    SE3,
+    PlaneSweepCoeffs,
+    apply_homography,
+    canonical_homography,
+    propagate_to_planes,
+    proportional_coeffs,
+)
+
+Array = jax.Array
+
+
+class FrameGeometry(NamedTuple):
+    """Per-event-frame geometry computed once on the host side (paper: ARM).
+
+    H:   (3, 3)  canonical homography, quantizable to Q11.21
+    phi: PlaneSweepCoeffs with (Nz,) alpha/beta_x/beta_y, quantizable Q11.21
+    """
+
+    H: Array
+    phi: PlaneSweepCoeffs
+
+
+def frame_geometry(
+    cam: CameraModel, T_w_ref: SE3, T_w_cam: SE3, z0: Array, planes: Array
+) -> FrameGeometry:
+    """Sub-tasks 1 & 3 of P: compute H_Z0 and phi (once per event frame)."""
+    T_ref_cam = T_w_ref.inverse().compose(T_w_cam)
+    H = canonical_homography(cam, T_ref_cam, z0)
+    phi = proportional_coeffs(cam, T_ref_cam, z0, planes)
+    return FrameGeometry(H, phi)
+
+
+def backproject_canonical(cam: CameraModel, xy: Array, H: Array) -> Array:
+    """Sub-task 2, P(Z0): homography + normalization per event. (E,2)->(E,2)."""
+    del cam  # kept in the signature for symmetry with the quantized path
+    return apply_homography(H, xy)
+
+
+def backproject_planes(
+    cam: CameraModel, xy0: Array, phi: PlaneSweepCoeffs
+) -> tuple[Array, Array]:
+    """Sub-task 4, P(Z0 -> Zi): (E,2) -> ((Nz,E), (Nz,E))."""
+    return propagate_to_planes(cam, xy0, phi)
+
+
+def backproject_frame(
+    cam: CameraModel, xy: Array, geom: FrameGeometry
+) -> tuple[Array, Array]:
+    """Full P for one event frame: (E,2) raw coords -> per-plane coords."""
+    xy0 = backproject_canonical(cam, xy, geom.H)
+    return backproject_planes(cam, xy0, geom.phi)

@@ -1,0 +1,68 @@
+"""Disparity Space Image (DSI): the ray-density volume.
+
+Layout: (Nz, h, w), z-major so one depth plane is a contiguous (h, w)
+image — matching both the FPGA's per-PE_Zi plane buffers and the Pallas
+kernel's per-grid-step VMEM tile.
+
+Scores are int32 while accumulating (overflow-safe), stored/checkpointed
+as int16 per the paper's DSI-score quantization (Table 1). A property test
+guards the paper's implicit claim that 16 bits never saturate for
+1024-event frames (max votes per voxel per keyframe <= #events between
+keyframes, bounded in practice by a few thousand).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import CameraModel
+from repro.core.geometry import depth_planes
+
+Array = jax.Array
+
+DSI_STORE_DTYPE = jnp.int16  # paper Table 1: DSI scores, 16-bit integer
+DSI_ACCUM_DTYPE = jnp.int32  # accumulation dtype (saturation-checked on store)
+
+
+@dataclasses.dataclass(frozen=True)
+class DSIConfig:
+    width: int = 240
+    height: int = 180
+    num_planes: int = 128
+    z_min: float = 0.5
+    z_max: float = 5.0
+    inverse_depth: bool = True
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self.num_planes, self.height, self.width)
+
+    def planes(self) -> Array:
+        return depth_planes(self.z_min, self.z_max, self.num_planes, self.inverse_depth)
+
+    @staticmethod
+    def for_camera(cam: CameraModel, num_planes: int = 128, z_min: float = 0.5,
+                   z_max: float = 5.0, inverse_depth: bool = True) -> "DSIConfig":
+        return DSIConfig(cam.width, cam.height, num_planes, z_min, z_max, inverse_depth)
+
+
+def zeros(cfg: DSIConfig, dtype=DSI_ACCUM_DTYPE) -> Array:
+    return jnp.zeros(cfg.shape, dtype=dtype)
+
+
+def to_storage(dsi: Array) -> Array:
+    """int32 accumulator -> int16 storage with saturation (RTL-style clip)."""
+    info = jnp.iinfo(DSI_STORE_DTYPE)
+    return jnp.clip(dsi, info.min, info.max).astype(DSI_STORE_DTYPE)
+
+
+def from_storage(dsi: Array) -> Array:
+    return dsi.astype(DSI_ACCUM_DTYPE)
+
+
+def saturation_fraction(dsi: Array) -> Array:
+    """Fraction of voxels that would clip at int16 — paper's 16b adequacy claim."""
+    info = jnp.iinfo(DSI_STORE_DTYPE)
+    return jnp.mean((dsi > info.max) | (dsi < info.min))

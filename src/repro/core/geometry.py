@@ -1,0 +1,220 @@
+"""SE(3) poses and plane-sweep geometry for event-based space-sweep.
+
+Implements the two geometric objects the paper's FPGA computes on the ARM
+side once per event frame:
+
+  * the canonical-plane homography  H_Z0  (current camera image -> reference
+    camera image via the plane z = Z0 in the reference frame), consumed by
+    PE_Z0 for P(Z0);
+  * the proportional back-projection coefficients  phi = {alpha_i, beta_i}
+    consumed by the PE_Zi scalar MACs for P(Z0 -> Zi).
+
+Derivation of phi (matches the paper's 2-MAC-per-plane structure):
+  Let C = (Cx, Cy, Cz) be the current camera's optical centre expressed in
+  the *reference* camera frame, and let a point on the canonical plane
+  z = Z0 project to reference pixel (x0, y0). The viewing ray through C and
+  that point intersects plane z = Zi at
+
+      s_i = (Zi - Cz) / (Z0 - Cz),
+      X_i = C + s_i (X_0 - C),            X_i.z = Zi  (exact).
+
+  Projecting X_i with the reference pinhole gives
+
+      x_i = alpha_i * (x0 - cx) + beta_x_i + cx,
+      y_i = alpha_i * (y0 - cy) + beta_y_i + cy,
+
+      alpha_i  = s_i * Z0 / Zi,
+      beta_x_i = fx * Cx * (1 - s_i) / Zi,
+      beta_y_i = fy * Cy * (1 - s_i) / Zi.
+
+  i.e. one multiply-add per coordinate per plane — exactly the workload the
+  paper assigns to the Scalar MAC Units inside each PE_Zi.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import CameraModel
+
+Array = jax.Array
+
+
+class SE3(NamedTuple):
+    """Rigid transform X_out = R @ X_in + t. Batched via leading dims."""
+
+    R: Array  # (..., 3, 3)
+    t: Array  # (..., 3)
+
+    @staticmethod
+    def identity(batch: tuple[int, ...] = ()) -> "SE3":
+        R = jnp.broadcast_to(jnp.eye(3, dtype=jnp.float32), batch + (3, 3))
+        t = jnp.zeros(batch + (3,), dtype=jnp.float32)
+        return SE3(R, t)
+
+    def compose(self, other: "SE3") -> "SE3":
+        """self ∘ other: apply `other` first, then `self`."""
+        return SE3(self.R @ other.R, (self.R @ other.t[..., None])[..., 0] + self.t)
+
+    def inverse(self) -> "SE3":
+        Rt = jnp.swapaxes(self.R, -1, -2)
+        return SE3(Rt, -(Rt @ self.t[..., None])[..., 0])
+
+    def apply(self, points: Array) -> Array:
+        """points: (..., 3) -> transformed (..., 3)."""
+        return jnp.einsum("...ij,...nj->...ni", self.R, points) + self.t[..., None, :]
+
+
+def so3_exp(w: Array) -> Array:
+    """Rodrigues: axis-angle (..., 3) -> rotation matrix (..., 3, 3)."""
+    theta = jnp.linalg.norm(w, axis=-1, keepdims=True)[..., None]  # (...,1,1)
+    safe = jnp.where(theta < 1e-8, 1.0, theta)
+    # build K (normalized cross-product matrix) explicitly for clarity
+    wx, wy, wz = w[..., 0], w[..., 1], w[..., 2]
+    zeros = jnp.zeros_like(wx)
+    K = jnp.stack(
+        [
+            jnp.stack([zeros, -wz, wy], axis=-1),
+            jnp.stack([wz, zeros, -wx], axis=-1),
+            jnp.stack([-wy, wx, zeros], axis=-1),
+        ],
+        axis=-2,
+    )
+    K = K / safe[..., 0, 0][..., None, None]
+    eye = jnp.broadcast_to(jnp.eye(3, dtype=w.dtype), K.shape)
+    sin_t, cos_t = jnp.sin(theta[..., 0, 0]), jnp.cos(theta[..., 0, 0])
+    R = eye + sin_t[..., None, None] * K + (1.0 - cos_t)[..., None, None] * (K @ K)
+    return jnp.where(theta < 1e-8, eye, R)
+
+
+def interpolate_pose(p0: SE3, p1: SE3, frac: Array) -> SE3:
+    """Linear pose interpolation (translation lerp; rotation via axis-angle).
+
+    Used to assign a camera pose to each event timestamp between two
+    trajectory samples (events are asynchronous; poses are sampled).
+    For the small inter-sample motions of event cameras this matches the
+    first-order interpolation used by the EMVS reference implementation.
+    """
+    t = p0.t + frac * (p1.t - p0.t)
+    # relative rotation
+    dR = p1.R @ jnp.swapaxes(p0.R, -1, -2)
+    w = so3_log(dR)
+    R = so3_exp(w * frac) @ p0.R
+    return SE3(R, t)
+
+
+def so3_log(R: Array) -> Array:
+    """Rotation matrix -> axis-angle (..., 3)."""
+    cos_theta = jnp.clip((jnp.trace(R, axis1=-2, axis2=-1) - 1.0) / 2.0, -1.0, 1.0)
+    theta = jnp.arccos(cos_theta)
+    sin_theta = jnp.sin(theta)
+    v = jnp.stack(
+        [
+            R[..., 2, 1] - R[..., 1, 2],
+            R[..., 0, 2] - R[..., 2, 0],
+            R[..., 1, 0] - R[..., 0, 1],
+        ],
+        axis=-1,
+    )
+    scale = jnp.where(jnp.abs(sin_theta) < 1e-8, 0.5, theta / (2.0 * sin_theta + 1e-30))
+    return v * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Plane sweep: depth planes, canonical homography, proportional coefficients
+# ---------------------------------------------------------------------------
+
+
+def depth_planes(z_min: float, z_max: float, num: int, inverse_depth: bool = True) -> Array:
+    """Depth plane placement. EMVS samples uniformly in inverse depth."""
+    if inverse_depth:
+        inv = jnp.linspace(1.0 / z_max, 1.0 / z_min, num, dtype=jnp.float32)
+        return (1.0 / inv)[::-1]  # ascending depth
+    return jnp.linspace(z_min, z_max, num, dtype=jnp.float32)
+
+
+def relative_pose_ref_from_cam(T_w_ref: SE3, T_w_cam: SE3) -> SE3:
+    """T_ref_cam: maps points in current-camera frame -> reference frame."""
+    return T_w_ref.inverse().compose(T_w_cam)
+
+
+def canonical_homography(cam: CameraModel, T_ref_cam: SE3, z0: Array) -> Array:
+    """H_Z0 (3x3): current-camera pixels -> reference pixels via plane z=Z0.
+
+    The plane z = Z0 in the *reference* frame, expressed in the current
+    frame, has normal n_c = R_cr^T e_z and offset d_c = Z0 - e_z . t_rc
+    (with T_ref_cam = (R_rc, t_rc) mapping cur -> ref). The induced
+    homography cur -> ref is
+
+        H = K (R_rc + t_rc n_c^T / d_c) K^{-1}
+
+    computed once per event frame (ARM-side work in the paper).
+    """
+    R_rc, t_rc = T_ref_cam.R, T_ref_cam.t
+    e_z = jnp.array([0.0, 0.0, 1.0], dtype=jnp.float32)
+    n_c = R_rc.T @ e_z  # plane normal in current frame
+    d_c = z0 - e_z @ t_rc  # plane offset along ray in current frame
+    H_metric = R_rc + jnp.outer(t_rc, n_c) / d_c
+    H = cam.K @ H_metric @ cam.K_inv
+    return (H / H[2, 2]).astype(jnp.float32)
+
+
+class PlaneSweepCoeffs(NamedTuple):
+    """phi: the proportional back-projection coefficients (paper sub-task 3).
+
+    alpha:  (Nz,)  scale of centred canonical coords
+    beta_x: (Nz,)  per-plane x offset
+    beta_y: (Nz,)  per-plane y offset
+    """
+
+    alpha: Array
+    beta_x: Array
+    beta_y: Array
+
+
+def proportional_coeffs(
+    cam: CameraModel, T_ref_cam: SE3, z0: Array, planes: Array
+) -> PlaneSweepCoeffs:
+    """Compute phi = {alpha_i, beta_i} for all depth planes (once per frame)."""
+    c_ref = T_ref_cam.t  # current camera centre in reference frame
+    cz = c_ref[2]
+    s = (planes - cz) / (z0 - cz)  # (Nz,)
+    alpha = s * z0 / planes
+    beta_x = cam.fx * c_ref[0] * (1.0 - s) / planes
+    beta_y = cam.fy * c_ref[1] * (1.0 - s) / planes
+    return PlaneSweepCoeffs(
+        alpha.astype(jnp.float32), beta_x.astype(jnp.float32), beta_y.astype(jnp.float32)
+    )
+
+
+def apply_homography(H: Array, xy: Array) -> Array:
+    """Apply 3x3 homography to pixel coords (..., 2) with normalization.
+
+    This is P(Z0): the PE_Z0 matrix-vector MAC + normalization unit.
+    """
+    x, y = xy[..., 0], xy[..., 1]
+    denom = H[2, 0] * x + H[2, 1] * y + H[2, 2]
+    u = (H[0, 0] * x + H[0, 1] * y + H[0, 2]) / denom
+    v = (H[1, 0] * x + H[1, 1] * y + H[1, 2]) / denom
+    return jnp.stack([u, v], axis=-1)
+
+
+def propagate_to_planes(
+    cam: CameraModel, xy0: Array, phi: PlaneSweepCoeffs
+) -> tuple[Array, Array]:
+    """P(Z0 -> Zi): centred multiply-add per plane (PE_Zi Scalar MACs).
+
+    xy0: (E, 2) canonical-plane coords. Returns (x_i, y_i): each (Nz, E).
+    """
+    xc = xy0[..., 0] - cam.cx  # (E,)
+    yc = xy0[..., 1] - cam.cy
+    x_i = phi.alpha[:, None] * xc[None, :] + phi.beta_x[:, None] + cam.cx
+    y_i = phi.alpha[:, None] * yc[None, :] + phi.beta_y[:, None] + cam.cy
+    return x_i, y_i
+
+
+def pose_distance(a: SE3, b: SE3) -> Array:
+    """Translation distance between two poses (keyframe criterion)."""
+    return jnp.linalg.norm(a.t - b.t)

@@ -1,0 +1,50 @@
+"""Key-frame selection (K).
+
+A new key reference view is declared when the camera has translated more
+than `dist_threshold` (a fraction of the mean scene depth, as in EMVS)
+from the previous key frame. On key-frame: extract depth (D), merge (M),
+reset the DSI, re-anchor the reference pose.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import SE3
+
+Array = jax.Array
+
+
+class KeyframeState(NamedTuple):
+    T_w_ref: SE3  # current reference (virtual camera) pose
+    keyframe_id: Array  # int32 counter
+    dist_threshold: Array  # float32
+
+
+def init_keyframe_state(T_w_ref: SE3, mean_depth: float, frac: float = 0.15) -> KeyframeState:
+    return KeyframeState(
+        T_w_ref=T_w_ref,
+        keyframe_id=jnp.int32(0),
+        dist_threshold=jnp.float32(mean_depth * frac),
+    )
+
+
+def is_new_keyframe(state: KeyframeState, T_w_cam: SE3) -> Array:
+    """True when the camera moved beyond the threshold from the reference."""
+    return jnp.linalg.norm(T_w_cam.t - state.T_w_ref.t) > state.dist_threshold
+
+
+def advance_keyframe(state: KeyframeState, T_w_cam: SE3, new_kf: Array) -> KeyframeState:
+    """Branchless keyframe update (pipeline-friendly, DESIGN.md §2)."""
+    sel = lambda a, b: jnp.where(new_kf, a, b)
+    T_new = SE3(
+        R=sel(T_w_cam.R, state.T_w_ref.R),
+        t=sel(T_w_cam.t, state.T_w_ref.t),
+    )
+    return KeyframeState(
+        T_w_ref=T_new,
+        keyframe_id=state.keyframe_id + new_kf.astype(jnp.int32),
+        dist_threshold=state.dist_threshold,
+    )

@@ -1,0 +1,72 @@
+"""Depth-map -> point-cloud conversion and global map merging (M)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.camera import CameraModel, unproject
+from repro.core.detection import DepthMap
+from repro.core.geometry import SE3
+
+Array = jax.Array
+
+
+class PointCloud(NamedTuple):
+    points: Array  # (N, 3) world-frame
+    weights: Array  # (N,) confidence (ray-density score)
+    valid: Array  # (N,) bool — fixed-size padding mask (jit-friendly)
+
+
+def depth_map_to_points(cam: CameraModel, dm: DepthMap, T_w_ref: SE3) -> PointCloud:
+    """Convert a semi-dense depth map to a fixed-size, masked point cloud."""
+    h, w = dm.depth.shape
+    ys, xs = jnp.meshgrid(jnp.arange(h, dtype=jnp.float32),
+                          jnp.arange(w, dtype=jnp.float32), indexing="ij")
+    pix = jnp.stack([xs, ys], axis=-1).reshape(-1, 2)
+    pts_cam = unproject(cam, pix, dm.depth.reshape(-1))
+    pts_w = T_w_ref.apply(pts_cam[None, :, :])[0]
+    return PointCloud(
+        points=pts_w,
+        weights=dm.confidence.reshape(-1),
+        valid=dm.mask.reshape(-1),
+    )
+
+
+def radius_outlier_filter(pc: PointCloud, radius: float = 0.05, min_neighbors: int = 2,
+                          max_points: int = 20000) -> PointCloud:
+    """Radius outlier removal (as in EMVS post-processing). NumPy host-side.
+
+    O(N^2) over valid points, chunked; N is semi-dense (thousands), fine.
+    """
+    pts = np.asarray(pc.points)
+    valid = np.asarray(pc.valid)
+    idx = np.nonzero(valid)[0][:max_points]
+    if idx.size == 0:
+        return pc
+    sub = pts[idx]
+    keep = np.zeros(idx.shape[0], dtype=bool)
+    chunk = 1024
+    r2 = radius * radius
+    for s in range(0, sub.shape[0], chunk):
+        d2 = ((sub[s:s + chunk, None, :] - sub[None, :, :]) ** 2).sum(-1)
+        keep[s:s + chunk] = (d2 < r2).sum(-1) - 1 >= min_neighbors
+    new_valid = np.zeros_like(valid)
+    new_valid[idx[keep]] = True
+    return PointCloud(pc.points, pc.weights, jnp.asarray(new_valid))
+
+
+def merge(global_pc: list[PointCloud], pc: PointCloud) -> list[PointCloud]:
+    """Append a local cloud to the global map (list of fixed-size blocks)."""
+    global_pc.append(pc)
+    return global_pc
+
+
+def concatenate(clouds: list[PointCloud]) -> PointCloud:
+    return PointCloud(
+        points=jnp.concatenate([c.points for c in clouds], axis=0),
+        weights=jnp.concatenate([c.weights for c in clouds], axis=0),
+        valid=jnp.concatenate([c.valid for c in clouds], axis=0),
+    )

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, expert parallelism, flash-decode,
+distributed EMVS, gradient compression, fault tolerance."""

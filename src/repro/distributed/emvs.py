@@ -1,0 +1,119 @@
+"""Distributed EMVS: the paper's technique as a first-class multi-pod feature.
+
+Parallelism mapping (DESIGN.md §2, mirrors the FPGA's three levels):
+
+  axis     paper's level                 here
+  -----    -------------------------     ------------------------------
+  model    DSI-level (multiple PE_Zi)    depth planes sharded; each rank
+                                         votes its own plane slice —
+                                         ZERO communication during R
+  data     event-level (pipelining)      event frames sharded; partial
+                                         DSIs merged by ONE integer psum
+                                         (votes are additive => exact)
+  pod      key-frame level (new)         segments processed concurrently;
+                                         local DSIs independent by
+                                         construction (DSI resets per
+                                         key frame) — pods only exchange
+                                         final depth maps
+
+The vote merge is an int32 psum — the lossless counterpart of the int8
+gradient compression in `compression.py` (the paper's bandwidth insight:
+narrow integer payloads on the links).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.camera import CameraModel
+from repro.core.detection import DepthMap, detect_structure
+from repro.core.dsi import DSIConfig
+from repro.core.geometry import PlaneSweepCoeffs, apply_homography, propagate_to_planes
+from repro.core.voting import vote_onehot_matmul
+
+Array = jax.Array
+
+
+def _vote_local(cam: CameraModel, xy: Array, valid: Array, H: Array,
+                phi: Array, nz_local: int, mode: str) -> Array:
+    """Vote local frames into a local (Nz_loc, h, w) plane slice (scan)."""
+    dsi0 = jnp.zeros((nz_local, cam.height, cam.width), jnp.float32)
+
+    def body(dsi, frame):
+        xy_f, valid_f, H_f, phi_f = frame
+        xy0 = apply_homography(H_f, xy_f)
+        coeffs = PlaneSweepCoeffs(phi_f[:, 0], phi_f[:, 1], phi_f[:, 2])
+        x_i, y_i = propagate_to_planes(cam, xy0, coeffs)
+        w = jnp.broadcast_to(valid_f.astype(jnp.float32)[None, :], x_i.shape)
+        return vote_onehot_matmul(dsi, x_i, y_i, w=cam.width, h=cam.height,
+                                  mode=mode, weights=w), None
+
+    dsi, _ = jax.lax.scan(body, dsi0, (xy, valid, H, phi))
+    return dsi
+
+
+def make_emvs_step(cam: CameraModel, dsi_cfg: DSIConfig, mesh: Mesh, *,
+                   mode: str = "nearest", data_axis: str = "data",
+                   model_axis: str = "model", pod_axis: str | None = None,
+                   vote_dtype=jnp.int32):
+    """Build the sharded EMVS segment step for `mesh`.
+
+    Inputs (global logical shapes; leading G = segments when pod_axis):
+        xy    (G?, F, E, 2)   valid (G?, F, E)
+        H     (G?, F, 3, 3)   phi   (G?, F, Nz, 3)
+    Returns (dsi (G?, Nz, h, w) int32 z-sharded, depth, mask, conf (G?, h, w)).
+    """
+    nz = dsi_cfg.num_planes
+    n_model = mesh.shape[model_axis]
+    assert nz % n_model == 0, (nz, n_model)
+    nz_loc = nz // n_model
+    planes_all = dsi_cfg.planes()
+
+    def seg_body(xy, valid, H, phi):
+        # local: xy (F_loc, E, 2), phi (F_loc, Nz_loc, 3)
+        dsi = _vote_local(cam, xy, valid, H, phi, nz_loc, mode)
+        # event-level merge: ONE integer all-reduce (exact). §Perf E2:
+        # int16 (the paper's Table-1 DSI width) halves the link payload;
+        # per-shard partial counts <= events/shard << 32767, and the
+        # int32 upcast after the psum keeps downstream math exact.
+        dsi = jax.lax.psum(dsi.astype(vote_dtype), data_axis).astype(jnp.int32)
+        # detection needs full-z per pixel: gather plane slices over model
+        dsi_full = jax.lax.all_gather(dsi, model_axis, axis=0, tiled=True)
+        dm = detect_structure(dsi_full.astype(jnp.float32), planes_all)
+        return dsi, dm.depth, dm.mask, dm.confidence
+
+    if pod_axis is None:
+        in_specs = (P(data_axis, None, None), P(data_axis, None),
+                    P(data_axis, None, None), P(data_axis, model_axis, None))
+        out_specs = (P(model_axis, None, None), P(), P(), P())
+        body = seg_body
+    else:
+        # key-frame-level parallelism: leading segment axis over pods
+        def body(xy, valid, H, phi):
+            return jax.vmap(seg_body)(xy, valid, H, phi)
+
+        in_specs = (P(pod_axis, data_axis, None, None), P(pod_axis, data_axis, None),
+                    P(pod_axis, data_axis, None, None),
+                    P(pod_axis, data_axis, model_axis, None))
+        out_specs = (P(pod_axis, model_axis, None, None), P(pod_axis),
+                     P(pod_axis), P(pod_axis))
+
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def emvs_input_specs(dsi_cfg: DSIConfig, *, frames: int, events: int,
+                     segments: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for the distributed EMVS step (dry-run)."""
+    lead = () if segments is None else (segments,)
+    f32 = jnp.float32
+    return {
+        "xy": jax.ShapeDtypeStruct(lead + (frames, events, 2), f32),
+        "valid": jax.ShapeDtypeStruct(lead + (frames, events), f32),
+        "H": jax.ShapeDtypeStruct(lead + (frames, 3, 3), f32),
+        "phi": jax.ShapeDtypeStruct(lead + (frames, dsi_cfg.num_planes, 3), f32),
+    }

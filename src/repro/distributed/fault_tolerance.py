@@ -1,0 +1,265 @@
+"""Fault tolerance: checkpoint/restart, preemption drain, elastic
+re-meshing, straggler detection.
+
+Design for 1000+ nodes (DESIGN.md):
+
+* **Checkpoints are logical, not physical**: saved as full (unsharded)
+  arrays + a JSON manifest, so a restore may use a *different* mesh —
+  that is what makes elastic restart work (lose a pod, re-mesh, resume).
+  Writes are atomic (tmp dir + rename) and rolling (keep_last).
+* **Preemption drain**: SIGTERM flips a flag; the training loop finishes
+  the in-flight step, checkpoints, and exits 0 — the scheduler restarts
+  on fresh capacity and `latest_step` resumes.
+* **Elastic re-mesh**: `elastic_mesh_shape` picks the largest supported
+  (pod, data, model) shape for the surviving device count, preferring
+  to shrink the data axis (batch scales down; TP degree is typically a
+  hard constraint of the model's memory footprint).
+* **Straggler mitigation**: per-step wall times are tracked; a step
+  slower than `factor` x rolling median flags the step. On TPU SPMD a
+  straggler stalls everyone at the next collective, so mitigation =
+  drain + restart without the slow host (policy emitted as an action
+  string; actual host exclusion is the scheduler's job).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import signal
+import time
+from typing import Any, Iterable
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+MANIFEST = "manifest.json"
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint save/restore
+# ---------------------------------------------------------------------------
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V":  # bfloat16 & friends: store raw uint view
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    extra: dict | None = None, keep_last: int = 3) -> str:
+    """Atomic rolling checkpoint. Returns the final step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    true_dtypes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        true_dtypes[key] = str(jax.numpy.asarray(leaf).dtype) \
+            if not hasattr(leaf, "dtype") else str(leaf.dtype)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": sorted(flat),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": true_dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    # rolling cleanup
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"), ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, name, MANIFEST)):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (values or ShapeDtypeStructs).
+
+    `shardings`: optional matching pytree of NamedShardings — this is the
+    elastic path: the mesh used here may differ from the one that saved.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else None)
+    leaves = []
+    for i, (path, leaf) in enumerate(flat_like[0]):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        arr = data[key]
+        true_dtype = manifest.get("dtypes", {}).get(key)
+        if true_dtype == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+# ---------------------------------------------------------------------------
+# Preemption drain
+# ---------------------------------------------------------------------------
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT -> drain flag. The train loop checkpoints and exits."""
+
+    def __init__(self, signals: Iterable[int] = (signal.SIGTERM,)):
+        self._flag = False
+        self._installed = []
+        for s in signals:
+            try:
+                prev = signal.signal(s, self._handle)
+                self._installed.append((s, prev))
+            except (ValueError, OSError):  # non-main thread
+                pass
+
+    def _handle(self, signum, frame):
+        self._flag = True
+
+    @property
+    def should_drain(self) -> bool:
+        return self._flag
+
+    def restore(self) -> None:
+        for s, prev in self._installed:
+            signal.signal(s, prev)
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-meshing
+# ---------------------------------------------------------------------------
+
+
+def elastic_mesh_shape(n_devices: int, *, model: int = 16,
+                       pod_size: int = 256) -> tuple[dict[str, int], int]:
+    """Largest (pod, data, model) mesh for the surviving device count.
+
+    TP degree (`model`) is held fixed (model-memory constraint); the data
+    axis shrinks first, then pods. Returns (axes dict, devices used).
+    Unused survivors become hot spares.
+    """
+    if n_devices < model:
+        raise ValueError(f"need >= {model} devices for TP={model}")
+    pods = max(n_devices // pod_size, 1)
+    while pods >= 1:
+        per_pod = n_devices // pods
+        data = per_pod // model
+        if data >= 1:
+            used = pods * data * model
+            axes = {"pod": pods, "data": data, "model": model}
+            if pods == 1:
+                axes = {"data": data, "model": model}
+            return axes, used
+        pods -= 1
+    raise ValueError("no viable mesh")
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """What a restart after failure does: re-mesh + resume from step."""
+
+    old_devices: int
+    new_devices: int
+    new_axes: dict[str, int]
+    resume_step: int | None
+    spares: int
+
+    def describe(self) -> str:
+        return (f"re-mesh {self.old_devices}->{self.new_devices} devices as "
+                f"{self.new_axes} (+{self.spares} spares), resume at step "
+                f"{self.resume_step}")
+
+
+def plan_elastic_restart(ckpt_dir: str, old_devices: int, surviving: int,
+                         *, model: int = 16, pod_size: int = 256) -> ElasticPlan:
+    axes, used = elastic_mesh_shape(surviving, model=model, pod_size=pod_size)
+    return ElasticPlan(
+        old_devices=old_devices, new_devices=used, new_axes=axes,
+        resume_step=latest_step(ckpt_dir), spares=surviving - used)
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+
+class StragglerMonitor:
+    """Rolling-median step-time watchdog.
+
+    `observe(dt)` returns an action string when dt exceeds factor x the
+    rolling median (None otherwise). Two graded responses:
+      * "warn"  — single slow step (transient: host GC, network blip)
+      * "drain" — `patience` consecutive slow steps (persistent straggler:
+        checkpoint + restart without the slow host)
+    """
+
+    def __init__(self, window: int = 32, factor: float = 2.0, patience: int = 3):
+        self.window = window
+        self.factor = factor
+        self.patience = patience
+        self.times: list[float] = []
+        self.slow_streak = 0
+
+    def observe(self, dt: float) -> str | None:
+        med = float(np.median(self.times)) if len(self.times) >= 8 else None
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if med is None:
+            return None
+        if dt > self.factor * med:
+            self.slow_streak += 1
+            if self.slow_streak >= self.patience:
+                self.slow_streak = 0
+                return "drain"
+            return "warn"
+        self.slow_streak = 0
+        return None

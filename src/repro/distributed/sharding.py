@@ -1,0 +1,282 @@
+"""Sharding rules: logical roles -> PartitionSpecs (MaxText-style).
+
+One rule table maps parameter *roles* (inferred from tree paths) to mesh
+axes, with divisibility guards, so a mesh change (16x16 single-pod vs
+2x16x16 multi-pod) or an arch change (kv heads 4..32, experts 16..384,
+vocab divisible or not) is config-only — no per-model spec tables.
+
+Axes semantics (launch/mesh.py):
+  pod    cross-pod data parallelism (params replicated across pods;
+         gradient all-reduce crosses the pod axis once per step)
+  data   in-pod data parallelism + FSDP param sharding
+  model  tensor/expert parallelism (Megatron-style within a pod)
+
+Key guards (DESIGN.md §6):
+  * heads shard over `model` only when the head count divides |model|;
+    GQA K/V heads replicate when kv_heads < |model| (standard GQA-TP).
+  * vocab shards over `model` only when divisible (mamba2's 50280 is
+    not: embed/lm_head replicate over model, shard over data via FSDP).
+  * MoE experts shard over `model` (EP); expert count always divides.
+  * FSDP shards the largest remaining dim of each big leaf over `data`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Which mesh axes play which role for one run."""
+
+    batch_axes: tuple[str, ...]  # e.g. ("pod", "data") — batch dim sharding
+    model_axis: str | None  # tensor/expert parallel axis
+    fsdp_axes: tuple[str, ...] = ("data",)  # param-shard axes (within pod)
+    fsdp: bool = True  # shard params/opt-state over fsdp_axes
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, fsdp: bool = True) -> "ShardingPlan":
+        names = mesh.axis_names
+        model = "model" if "model" in names else None
+        batch = tuple(n for n in names if n in ("pod", "data"))
+        return ShardingPlan(batch_axes=batch, model_axis=model,
+                            fsdp_axes=("data",) if "data" in names else (),
+                            fsdp=fsdp)
+
+
+def _axis_size(mesh: Mesh, name: str | None) -> int:
+    if name is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding
+# ---------------------------------------------------------------------------
+
+
+def _param_rule(path: str, shape: tuple[int, ...], cfg: ArchConfig,
+                mesh: Mesh, plan: ShardingPlan) -> P:
+    """Logical TP/EP spec for one parameter leaf (no FSDP yet)."""
+    tp = _axis_size(mesh, plan.model_axis)
+    m = plan.model_axis
+    none = P()
+
+    def last_dim_over_model(div: int) -> P:
+        if tp > 1 and div % tp == 0:
+            return P(*([None] * (len(shape) - 1) + [m]))
+        return none
+
+    def dim_over_model(axis: int, div: int) -> P:
+        if tp > 1 and div % tp == 0:
+            spec: list = [None] * len(shape)
+            spec[axis] = m
+            return P(*spec)
+        return none
+
+    in_blocks = path.startswith("blocks/")
+
+    # --- embeddings / head ---
+    if path.endswith("embed/table") or path == "lm_head":
+        return dim_over_model(0, shape[0])  # vocab
+
+    if not in_blocks:
+        return none  # final_norm etc.
+
+    # --- attention ---
+    if "/attn/" in path:
+        hq, hkv = cfg.n_heads_eff, cfg.n_kv_heads_eff
+        if path.endswith(("wq/w", "wq/b")):
+            return last_dim_over_model(hq) if hq % max(tp, 1) == 0 else none
+        if path.endswith(("wk/w", "wk/b", "wv/w", "wv/b")):
+            return last_dim_over_model(hkv) if hkv % max(tp, 1) == 0 else none
+        if path.endswith("wo/w"):
+            return dim_over_model(1, hq) if hq % max(tp, 1) == 0 else none
+        return none  # qk-norm scales, wo bias
+
+    # --- MoE ---
+    if "/moe/" in path:
+        if "/experts/" in path:
+            return dim_over_model(1, shape[1])  # (n_sb, E, ..): EP over experts
+        if "/shared/" in path:
+            if path.endswith(("w_gate", "w_up")):
+                return last_dim_over_model(shape[-1])
+            if path.endswith("w_down"):
+                return dim_over_model(1, shape[1])
+        return none  # router
+
+    # --- dense MLP ---
+    if "/dense/" in path or "/ffn/" in path:
+        if path.endswith(("w_gate", "w_up", "b_up")):
+            return last_dim_over_model(shape[-1])
+        if path.endswith("w_down"):
+            return dim_over_model(1, shape[1])
+        return none  # b_down (output-dim bias stays replicated)
+
+    # --- Mamba-2 (head-aligned streams shard; B/C replicate) ---
+    if "/mamba/" in path:
+        nh = cfg.ssm.num_heads(cfg.d_model) if cfg.ssm else 0
+        head_ok = tp > 1 and nh % tp == 0
+        if not head_ok:
+            return none
+        if path.endswith(("w_z/w", "w_x/w", "w_dt/w")):
+            return P(*([None] * (len(shape) - 1) + [m]))
+        if path.endswith(("conv_x_w", "conv_x_b", "norm")):
+            return P(*([None] * (len(shape) - 1) + [m]))
+        if path.endswith(("A_log", "dt_bias", "D")):
+            return P(None, m)  # (n_sb, nh)
+        if path.endswith("out_proj/w"):
+            return P(None, m, None)
+        return none  # w_B, w_C, conv_B*, conv_C*, biases
+
+    return none
+
+
+def _add_fsdp(spec: P, shape: tuple[int, ...], mesh: Mesh,
+              plan: ShardingPlan, min_size: int = 2 ** 16) -> P:
+    """Shard the largest unsharded dim over the fsdp axes (if divisible)."""
+    if not plan.fsdp or not plan.fsdp_axes:
+        return spec
+    import numpy as np
+
+    if int(np.prod(shape)) < min_size:
+        return spec  # tiny leaves stay replicated
+    fs = 1
+    for a in plan.fsdp_axes:
+        fs *= _axis_size(mesh, a)
+    if fs <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # candidate dims: unsharded, divisible; prefer the largest
+    cands = [i for i in range(len(shape))
+             if entries[i] is None and shape[i] % fs == 0]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda i: shape[i])
+    ax = plan.fsdp_axes if len(plan.fsdp_axes) > 1 else plan.fsdp_axes[0]
+    entries[best] = ax
+    return P(*entries)
+
+
+def fsdp_dim(shape: tuple[int, ...], fs: int, taken: tuple[int, ...] = ()
+             ) -> int | None:
+    """Which dim _add_fsdp would shard: the largest free, divisible one."""
+    cands = [i for i in range(len(shape))
+             if i not in taken and shape[i] % fs == 0]
+    return max(cands, key=lambda i: shape[i]) if cands else None
+
+
+def param_specs(cfg: ArchConfig, params_shape: Any, mesh: Mesh,
+                plan: ShardingPlan) -> Any:
+    """PartitionSpec tree for the parameter pytree (shapes via eval_shape)."""
+
+    def leaf(path, x):
+        spec = _param_rule(_path_str(path), x.shape, cfg, mesh, plan)
+        return _add_fsdp(spec, x.shape, mesh, plan)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def param_shardings(cfg: ArchConfig, params_shape: Any, mesh: Mesh,
+                    plan: ShardingPlan) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params_shape, mesh, plan),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / decode-state sharding
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh, plan: ShardingPlan) -> P:
+    """Shard dim 0 (global batch) over the batch axes, if divisible."""
+    bs = 1
+    for a in plan.batch_axes:
+        bs *= _axis_size(mesh, a)
+    if shape and bs > 1 and shape[0] % bs == 0:
+        return P(plan.batch_axes, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def input_shardings(specs: dict, mesh: Mesh, plan: ShardingPlan) -> dict:
+    return {k: NamedSharding(mesh, batch_spec(v.shape, mesh, plan))
+            for k, v in specs.items()}
+
+
+def decode_state_specs(cfg: ArchConfig, state_shape: Any, mesh: Mesh,
+                       plan: ShardingPlan) -> Any:
+    """Decode-state sharding.
+
+    KV caches (n_sb, B, S, Hkv, D) are the dominant serving footprint
+    (e.g. qwen3 decode_32k: 618 GB global) — batch sharding alone leaves
+    38 GB/chip. So: batch over the batch axes AND sequence over `model`
+    (kv heads rarely divide |model|); when batch=1 (long-context) the
+    sequence takes BOTH data and model axes — GSPMD then computes the
+    partial-softmax combine, i.e. distributed flash-decoding falls out
+    of the sharding. SSD states shard heads over `model`.
+    """
+    tp = _axis_size(mesh, plan.model_axis)
+    m = plan.model_axis
+
+    def leaf(path, x):
+        p = _path_str(path)
+        shape = x.shape  # leading (n_sb,)
+        bs = 1
+        for a in plan.batch_axes:
+            bs *= _axis_size(mesh, a)
+        batch = shape[1] if len(shape) > 1 else 1
+        batch_ok = bs > 1 and batch % bs == 0
+        is_kv = ("/k" in p or "/v" in p) and len(shape) == 5
+        if is_kv:
+            seq = shape[2]
+            if batch_ok:  # batch over (pod, data); sequence over model
+                if tp > 1 and seq % tp == 0:
+                    return P(None, plan.batch_axes, m, None, None)
+                return P(None, plan.batch_axes, None, None, None)
+            # batch=1: sequence over every batch axis + model
+            seq_axes = tuple(a for a in (plan.batch_axes + ((m,) if m else ()))
+                             if _axis_size(mesh, a) > 1)
+            total = 1
+            for a in seq_axes:
+                total *= _axis_size(mesh, a)
+            if seq_axes and seq % total == 0:
+                return P(None, None, seq_axes, None, None)
+            return P(*([None] * len(shape)))
+        if batch_ok and len(shape) > 1:
+            return P(None, plan.batch_axes, *([None] * (len(shape) - 2)))
+        # SSD state (n_sb, B, H, N, P): heads over model
+        if p.endswith("ssd") and len(shape) == 5 and tp > 1 and shape[2] % tp == 0:
+            return P(None, None, m, None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_shape)
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x: Array, mesh: Mesh, spec: P) -> Array:
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

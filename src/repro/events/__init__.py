@@ -1,0 +1,1 @@
+"""Event data pipeline: simulator, streaming correction, aggregation."""

@@ -1,0 +1,66 @@
+"""Event aggregation (A): stream -> fixed-size event frames.
+
+The paper aggregates 1024 events per frame ("determined according to the
+sensor's event rate and storage") and attaches one camera pose per frame
+(interpolated at the frame's mid-timestamp).
+
+Per the paper's rescheduling, distortion correction runs *before*
+aggregation, per event, in streaming order.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import CameraModel, undistort_events
+from repro.core.geometry import SE3, interpolate_pose
+from repro.events.simulator import EventStream, Trajectory
+
+Array = jax.Array
+
+EVENTS_PER_FRAME = 1024  # paper §4.3
+
+
+class EventFrames(NamedTuple):
+    xy: Array  # (F, E, 2) rectified coords
+    valid: Array  # (F, E)
+    t_mid: Array  # (F,)
+    poses: SE3  # batched (F,3,3),(F,3): per-frame camera pose
+
+
+def pose_at_times(traj: Trajectory, t_query: Array) -> SE3:
+    """Interpolate trajectory poses at query times (vectorized)."""
+    # locate bracketing samples
+    idx = jnp.clip(jnp.searchsorted(traj.times, t_query, side="right") - 1,
+                   0, traj.times.shape[0] - 2)
+    t0, t1 = traj.times[idx], traj.times[idx + 1]
+    frac = jnp.clip((t_query - t0) / jnp.maximum(t1 - t0, 1e-9), 0.0, 1.0)
+
+    def interp_one(i, f):
+        p0 = SE3(traj.poses.R[i], traj.poses.t[i])
+        p1 = SE3(traj.poses.R[i + 1], traj.poses.t[i + 1])
+        return interpolate_pose(p0, p1, f)
+
+    poses = jax.vmap(interp_one)(idx, frac)
+    return poses
+
+
+def aggregate(cam: CameraModel, stream: EventStream, traj: Trajectory,
+              events_per_frame: int = EVENTS_PER_FRAME) -> EventFrames:
+    """Slice the (sorted) stream into frames of `events_per_frame`.
+
+    Streaming distortion correction is applied first (paper rescheduling).
+    The tail that does not fill a frame is dropped (as on the device,
+    where a partial frame waits for more events).
+    """
+    xy = undistort_events(cam, stream.xy) if cam.has_distortion() else stream.xy
+    n_frames = stream.t.shape[0] // events_per_frame
+    n_keep = n_frames * events_per_frame
+    xy = xy[:n_keep].reshape(n_frames, events_per_frame, 2)
+    valid = stream.valid[:n_keep].reshape(n_frames, events_per_frame)
+    t = stream.t[:n_keep].reshape(n_frames, events_per_frame)
+    t_mid = jnp.median(t, axis=1)
+    poses = pose_at_times(traj, t_mid)
+    return EventFrames(xy=xy, valid=valid, t_mid=t_mid, poses=poses)

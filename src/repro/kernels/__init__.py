@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, layout, dtype plumbing)
+  ref.py    — pure-jnp oracle; tests assert allclose across shape/dtype sweeps
+
+Kernels:
+  backproject_vote — the paper's P(Z0->Zi)+G+V fused (Proportional
+                     Projection Module): one-hot matmul voting on the MXU.
+  local_max        — scene-structure detection (D): fused max/argmax-over-z
+                     + sub-voxel parabola refinement.
+  flash_attention  — blockwise online-softmax attention for the LM
+                     substrate (train + prefill long-seq path).
+"""

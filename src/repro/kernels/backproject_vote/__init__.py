@@ -1,0 +1,1 @@
+from repro.kernels.backproject_vote.ops import backproject_vote, backproject_vote_frames  # noqa: F401

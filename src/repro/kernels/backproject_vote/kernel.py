@@ -1,0 +1,177 @@
+"""Pallas TPU kernel: fused proportional back-projection + DSI voting.
+
+This is the Proportional Projection Module of the paper (PE_Zi array +
+Vote Execute Unit), re-architected for the TPU memory hierarchy:
+
+  FPGA                                  TPU (this kernel)
+  ----------------------------------    ----------------------------------
+  multiple PE_Zi, one depth plane 	    grid axis 0 = depth-plane blocks
+    each                                  (BZ planes per step)
+  Buf_I double buffering of event       grid axis 1 = event frames, minor;
+    frames                                Pallas pipelines HBM->VMEM DMAs
+                                          of frame f+1 under compute of f
+  Scalar MAC units (P(Z0->Zi))          VPU multiply-add on (E,) vectors
+  Nearest Voxel Finder + miss judge     round/floor + bounds mask
+  Vote Address Generator + Vote         one-hot/two-hot row construction +
+    Execute Unit (DRAM RMW scatter)       MXU matmul  votes = Oy^T @ Ox,
+                                          accumulated in a VMEM-resident
+                                          (BZ, h_pad, w_pad) output block
+
+Tiling: the full (h_pad, w_pad) plane tile lives in VMEM
+(184*256*4 B = 188 KiB) — the DAVIS-scale DSI plane is small relative to
+VMEM (~16 MiB), so we tile over depth, not space. The output z-block is
+revisited across all frames (axis 1 minor) and written back to HBM once.
+
+The event-index contraction (E or F_STEP*E) feeds the MXU with a
+(h_pad, E) x (E, w_pad) matmul per plane — systolic-friendly dims
+(multiples of 8/128 via padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANE = 128
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _kernel(
+    x_ref,  # (FS, E) raw canonical x coords for FS frames
+    y_ref,  # (FS, E)
+    valid_ref,  # (FS, E) float32 1/0
+    phi_ref,  # (FS, BZ, 3) alpha, beta_x, beta_y  (per frame, per plane)
+    out_ref,  # (BZ, h_pad, w_pad) float32 accumulator block
+    *,
+    cx: float,
+    cy: float,
+    w: int,
+    h: int,
+    bz: int,
+    fs: int,
+    mode: str,
+    onehot_dtype,
+):
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    e = x_ref.shape[1]
+    w_pad = out_ref.shape[2]
+    h_pad = out_ref.shape[1]
+
+    # flatten the frame-step axis into the event contraction axis
+    x0 = x_ref[...].reshape(fs * e) - cx  # (FS*E,) centred canonical coords
+    y0 = y_ref[...].reshape(fs * e) - cy
+    vv = valid_ref[...].reshape(fs * e)
+
+    col_x = jax.lax.broadcasted_iota(jnp.float32, (fs * e, w_pad), 1)
+    col_y = jax.lax.broadcasted_iota(jnp.float32, (fs * e, h_pad), 1)
+
+    for p in range(bz):
+        # P(Z0 -> Zi): one multiply-add per coordinate (the PE_Zi scalar MACs)
+        # phi is per-frame; broadcast each frame's coeffs over its events.
+        alpha = phi_ref[:, p, 0:1]  # (FS, 1)
+        bx = phi_ref[:, p, 1:2]
+        by = phi_ref[:, p, 2:3]
+        a_e = jnp.broadcast_to(alpha, (fs, e)).reshape(fs * e)
+        bx_e = jnp.broadcast_to(bx, (fs, e)).reshape(fs * e)
+        by_e = jnp.broadcast_to(by, (fs, e)).reshape(fs * e)
+        xi = a_e * x0 + bx_e + cx
+        yi = a_e * y0 + by_e + cy
+        xi = jnp.clip(jnp.where(jnp.isfinite(xi), xi, -1e6), -1e6, 1e6)
+        yi = jnp.clip(jnp.where(jnp.isfinite(yi), yi, -1e6), -1e6, 1e6)
+
+        if mode == "nearest":
+            xr = jnp.floor(xi + 0.5)
+            yr = jnp.floor(yi + 0.5)
+            # miss judgement against the LOGICAL sensor bounds
+            ok = (xr >= 0) & (xr <= w - 1) & (yr >= 0) & (yr <= h - 1)
+            wt = vv * ok.astype(jnp.float32)
+            ox = (xr[:, None] == col_x).astype(onehot_dtype)
+            oy = (yr[:, None] == col_y).astype(onehot_dtype)
+            # int8 rows (§Perf E1): 0/1 one-hots and the 0/1 validity mask
+            # are exact in int8; the MXU's int8 path runs 2x bf16 rate
+            ox = ox * wt[:, None].astype(onehot_dtype)
+        else:  # bilinear: separable two-hot rows
+            xf = jnp.floor(xi)
+            yf = jnp.floor(yi)
+            ok = (xf >= 0) & (xf + 1 <= w - 1) & (yf >= 0) & (yf + 1 <= h - 1)
+            wt = (vv * ok.astype(jnp.float32)).astype(onehot_dtype)
+            fx = (xi - xf).astype(onehot_dtype)
+            fy = (yi - yf).astype(onehot_dtype)
+            ox = ((xf[:, None] == col_x).astype(onehot_dtype) * (1 - fx)[:, None]
+                  + ((xf + 1)[:, None] == col_x).astype(onehot_dtype) * fx[:, None])
+            oy = ((yf[:, None] == col_y).astype(onehot_dtype) * (1 - fy)[:, None]
+                  + ((yf + 1)[:, None] == col_y).astype(onehot_dtype) * fy[:, None])
+            ox = ox * wt[:, None]
+
+        # votes = Oy^T @ Ox on the MXU; int8 operands accumulate in int32
+        # (exact: counts <= E), float in fp32 (exact: counts << 2^24)
+        acc_type = jnp.int32 if onehot_dtype == jnp.int8 else jnp.float32
+        votes = jax.lax.dot_general(
+            oy, ox,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=acc_type,
+        )  # (h_pad, w_pad)
+        out_ref[p, :, :] += votes.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cx", "cy", "w", "h", "block_z", "frames_per_step", "mode",
+                     "onehot_dtype", "interpret"),
+)
+def backproject_vote_pallas(
+    x0: Array,  # (F, E) canonical-plane x coords
+    y0: Array,  # (F, E)
+    valid: Array,  # (F, E) float32
+    phi: Array,  # (F, Nz, 3)
+    *,
+    cx: float,
+    cy: float,
+    w: int,
+    h: int,
+    block_z: int = 8,
+    frames_per_step: int = 1,
+    mode: str = "nearest",
+    onehot_dtype=jnp.bfloat16,
+    interpret: bool = True,
+) -> Array:
+    """Returns the padded DSI (Nz, h_pad, w_pad) float32."""
+    F, E = x0.shape
+    nz = phi.shape[1]
+    assert nz % block_z == 0, (nz, block_z)
+    assert F % frames_per_step == 0, (F, frames_per_step)
+    w_pad = _round_up(w, LANE)
+    h_pad = _round_up(h, SUBLANE)
+    fs = frames_per_step
+    grid = (nz // block_z, F // fs)
+
+    kern = functools.partial(
+        _kernel, cx=cx, cy=cy, w=w, h=h, bz=block_z, fs=fs, mode=mode,
+        onehot_dtype=onehot_dtype,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((fs, E), lambda z, f: (f, 0)),
+            pl.BlockSpec((fs, E), lambda z, f: (f, 0)),
+            pl.BlockSpec((fs, E), lambda z, f: (f, 0)),
+            pl.BlockSpec((fs, block_z, 3), lambda z, f: (f, z, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_z, h_pad, w_pad), lambda z, f: (z, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nz, h_pad, w_pad), jnp.float32),
+        interpret=interpret,
+    )(x0, y0, valid, phi)

@@ -1,0 +1,144 @@
+"""Pallas TPU flash attention (forward): online-softmax over KV blocks.
+
+Grid: (B*Hq, Sq/BQ, Skv/BK) with the KV axis innermost; the (m, l, acc)
+running statistics live in VMEM scratch and persist across KV steps —
+the same accumulate-while-resident pattern as the backproject_vote
+kernel's DSI block (and the FPGA's Buf_V double buffering).
+
+Causal blocks that are entirely above the diagonal are skipped with
+pl.when (no MXU work issued). GQA is handled by index-mapping the KV
+block to `bh // q_per_kv` — queries in a group share the KV stream, so
+no KV duplication in HBM or VMEM.
+
+Used for serving/prefill forward. Training uses the differentiable
+blockwise-jnp path in `repro.models.attention` (same math; autodiff).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, BQ, D)
+    k_ref,  # (1, BK, D)
+    v_ref,  # (1, BK, D)
+    o_ref,  # (1, BQ, D)
+    m_ref,  # scratch (BQ, STATS)
+    l_ref,  # scratch (BQ, STATS)
+    acc_ref,  # scratch (BQ, D)
+    *,
+    scale: float,
+    causal: bool,
+    bq: int,
+    bk: int,
+    num_kv_blocks: int,
+    q_offset: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: query global pos = qi*bq + r + q_offset; kv pos = kj*bk + c.
+    # block fully masked iff smallest qpos < largest kvpos strictly below
+    # diagonal for ALL pairs: qi*bq + q_offset + (bq-1) < kj*bk
+    run = True
+    if causal:
+        run = qi * bq + q_offset + (bq - 1) >= kj * bk
+
+    @pl.when(run)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+        if causal:
+            qpos = qi * bq + q_offset + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[:, 0:1]  # (BQ, 1)
+        l_prev = l_ref[:, 0:1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (BQ, BK)
+        corr = jnp.exp(m_prev - m_new)  # (BQ, 1)
+        l_new = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (BQ, D)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, 0:1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "q_per_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: Array,  # (BHq, Sq, D)
+    k: Array,  # (BHkv, Skv, D)
+    v: Array,  # (BHkv, Skv, D)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_per_kv: int = 1,
+    interpret: bool = True,
+) -> Array:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    grid = (bh, sq // bq, skv // bk)
+    q_offset = skv - sq  # decode/prefill alignment (q block ends at kv end)
+    stats = 128  # lane-width scratch for (m, l)
+
+    kern = functools.partial(
+        _kernel,
+        scale=1.0 / (d ** 0.5),
+        causal=causal,
+        bq=bq,
+        bk=bk,
+        num_kv_blocks=skv // bk,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qi, kj: (b, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, kj, g=q_per_kv: (b // g, kj, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, kj, g=q_per_kv: (b // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qi, kj: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, stats), jnp.float32),
+            pltpu.VMEM((bq, stats), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

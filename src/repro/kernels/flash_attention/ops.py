@@ -1,0 +1,39 @@
+"""Public wrapper: (B, H, S, D) layout + GQA plumbing for the flash kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: Array,  # (B, Hq, Sq, D)
+    k: Array,  # (B, Hkv, Skv, D)
+    v: Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    g = hq // hkv
+    out = flash_attention_pallas(
+        q.reshape(b * hq, sq, d),
+        k.reshape(b * hkv, skv, d),
+        v.reshape(b * hkv, skv, d),
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        q_per_kv=g,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, sq, d)

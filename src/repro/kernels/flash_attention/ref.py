@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: causal (optionally GQA) attention, fp32 softmax."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True) -> Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, D) in q.dtype. Softmax in fp32.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

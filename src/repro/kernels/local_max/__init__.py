@@ -1,0 +1,1 @@
+from repro.kernels.local_max.ops import depth_argmax  # noqa: F401

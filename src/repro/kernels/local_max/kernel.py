@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for stage D: fused depth max/argmax + parabola refine.
+
+Gather-free formulation: TPU vector units have no efficient per-lane
+gather along the depth axis, so instead of `dsi[z*±1]` lookups the kernel
+tracks, in one streaming pass over depth blocks, the running triple
+(c[z*-1], c[z*], c[z*+1]) around the argmax using select ops only:
+
+  prev  — value at z-1 (shifted-by-one running value)
+  best  — running max, zbest — its index
+  next_ — value at zbest+1, captured on the step after a new max
+
+Grid: (h tiles, w tiles); each step loads a (Nz, TH, TW) VMEM column
+block and reduces it along depth with an unrolled loop over SUBLANE-sized
+depth slabs (depth is the major axis, so slabs are contiguous).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANE = 128
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _kernel(dsi_ref, conf_ref, zf_ref, *, nz: int):
+    th, tw = conf_ref.shape
+
+    neg = jnp.float32(-1.0)  # DSI scores are >= 0; -1 never wins
+    best = jnp.full((th, tw), neg, dtype=jnp.float32)
+    zbest = jnp.zeros((th, tw), dtype=jnp.float32)
+    c_prev_of_best = jnp.zeros((th, tw), dtype=jnp.float32)  # value at z*-1
+    c_next_of_best = jnp.zeros((th, tw), dtype=jnp.float32)  # value at z*+1
+    prev = jnp.zeros((th, tw), dtype=jnp.float32)  # value at z-1
+    prev_was_best = jnp.zeros((th, tw), dtype=jnp.bool_)
+
+    # stream depth; plain python loop (nz is static, modest: 64..512)
+    for z in range(nz):
+        cur = dsi_ref[z, :, :].astype(jnp.float32)
+        # capture c[z*+1] one step after the argmax was set
+        c_next_of_best = jnp.where(prev_was_best, cur, c_next_of_best)
+        is_new_best = cur > best
+        c_prev_of_best = jnp.where(is_new_best, prev, c_prev_of_best)
+        zbest = jnp.where(is_new_best, jnp.float32(z), zbest)
+        best = jnp.where(is_new_best, cur, best)
+        # z*+1 unseen yet for a fresh best: default to 0 until captured
+        c_next_of_best = jnp.where(is_new_best, jnp.zeros_like(cur), c_next_of_best)
+        prev_was_best = is_new_best
+        prev = cur
+
+    # boundary conventions match the ref oracle's index clamping:
+    #   z*=0    -> cm = c0 (clip(z-1))     z*=nz-1 -> cp = c0
+    c0 = best
+    cm = jnp.where(zbest == 0, c0, c_prev_of_best)
+    cp = jnp.where(zbest == nz - 1, c0, c_next_of_best)
+    denom = cm - 2.0 * c0 + cp
+    offset = jnp.where(jnp.abs(denom) > 1e-6, 0.5 * (cm - cp) / denom, 0.0)
+    offset = jnp.clip(offset, -0.5, 0.5)
+    conf_ref[...] = best
+    zf_ref[...] = zbest + offset
+
+
+@functools.partial(jax.jit, static_argnames=("tile_h", "tile_w", "interpret"))
+def depth_argmax_pallas(
+    dsi: Array, *, tile_h: int = 8, tile_w: int = 128, interpret: bool = True
+) -> tuple[Array, Array]:
+    """dsi (Nz, h, w) -> (conf (h,w), zf (h,w)). h, w padded to tiles."""
+    nz, h, w = dsi.shape
+    h_pad = _round_up(h, tile_h)
+    w_pad = _round_up(w, tile_w)
+    if (h_pad, w_pad) != (h, w):
+        dsi = jnp.pad(dsi, ((0, 0), (0, h_pad - h), (0, w_pad - w)))
+    grid = (h_pad // tile_h, w_pad // tile_w)
+    conf, zf = pl.pallas_call(
+        functools.partial(_kernel, nz=nz),
+        grid=grid,
+        in_specs=[pl.BlockSpec((nz, tile_h, tile_w), lambda i, j: (0, i, j))],
+        out_specs=[
+            pl.BlockSpec((tile_h, tile_w), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_h, tile_w), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h_pad, w_pad), jnp.float32),
+            jax.ShapeDtypeStruct((h_pad, w_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dsi)
+    return conf[:h, :w], zf[:h, :w]

@@ -1,0 +1,13 @@
+"""Public wrapper for the detection kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.local_max.kernel import depth_argmax_pallas
+
+Array = jax.Array
+
+
+def depth_argmax(dsi: Array, *, interpret: bool = True) -> tuple[Array, Array]:
+    """Fused (conf, refined argmax) over the depth axis of a DSI."""
+    return depth_argmax_pallas(dsi, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the detection kernel: fused max/argmax over depth
+with sub-voxel parabola refinement (stage D hot loop).
+
+Outputs, per pixel:
+  conf — max_z DSI
+  zf   — argmax_z refined by a 3-point parabola fit, clamped to ±0.5
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.jit
+def depth_argmax_ref(dsi: Array) -> tuple[Array, Array]:
+    """dsi: (Nz, h, w) -> (conf (h,w) f32, zf (h,w) f32)."""
+    dsi_f = dsi.astype(jnp.float32)
+    nz = dsi.shape[0]
+    conf = jnp.max(dsi_f, axis=0)
+    zidx = jnp.argmax(dsi_f, axis=0)
+    zm = jnp.clip(zidx - 1, 0, nz - 1)
+    zp = jnp.clip(zidx + 1, 0, nz - 1)
+    hh, ww = jnp.meshgrid(jnp.arange(dsi.shape[1]), jnp.arange(dsi.shape[2]),
+                          indexing="ij")
+    cm = dsi_f[zm, hh, ww]
+    c0 = dsi_f[zidx, hh, ww]
+    cp = dsi_f[zp, hh, ww]
+    denom = cm - 2.0 * c0 + cp
+    offset = jnp.where(jnp.abs(denom) > 1e-6, 0.5 * (cm - cp) / denom, 0.0)
+    offset = jnp.clip(offset, -0.5, 0.5)
+    return conf, zidx.astype(jnp.float32) + offset

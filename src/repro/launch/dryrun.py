@@ -1,0 +1,310 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes and extract memory/cost/collective evidence.
+
+    python -m repro.launch.dryrun --arch qwen3-8b --cell train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+
+The driver mode (--all) runs each cell in a subprocess: one cell's
+failure (or RAM spike) cannot take down the sweep, and each compile gets
+a fresh XLA. Results land in one JSON per cell + an aggregate table.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   Set ONLY here — tests and benches see the real (single) device.
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, get_config
+from repro.configs.shapes import EMVS_CELLS, LM_CELLS, ShapeCell, cell_skipped, input_specs
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+
+ARCHS = [
+    "kimi-k2-1t-a32b", "deepseek-moe-16b", "musicgen-large", "stablelm-3b",
+    "qwen3-8b", "starcoder2-15b", "qwen1.5-4b", "jamba-1.5-large-398b",
+    "llava-next-mistral-7b", "mamba2-2.7b", "eventor-davis240",
+]
+
+MAX_TOKENS_PER_DEV_MB = 16384  # microbatch sizing target (activation memory)
+
+
+def _pick_microbatches(cell: ShapeCell, batch_shards: int) -> int:
+    tokens_per_dev = cell.global_batch * cell.seq_len // batch_shards
+    mb = 1
+    while (tokens_per_dev // mb > MAX_TOKENS_PER_DEV_MB
+           and (cell.global_batch // (mb * 2)) % batch_shards == 0
+           and cell.global_batch // (mb * 2) >= batch_shards):
+        mb *= 2
+    return mb
+
+
+def _batch_shards(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Per-kind lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh, opt_flags: frozenset = frozenset()):
+    from repro.distributed import sharding as shd
+
+    plan = shd.ShardingPlan.for_mesh(mesh)
+    specs = input_specs(cfg, cell)
+
+    if cfg.family == "emvs":
+        return _lower_emvs(cfg, cell, mesh, opt_flags)
+
+    # §Perf beyond-paper optimizations (opt-in; baseline = paper-faithful)
+    if "pad_heads" in opt_flags and cfg.n_heads:
+        cfg = cfg.pad_heads_to(mesh.shape.get("model", 1))
+
+    if cell.kind == "train":
+        from repro.training.train_step import TrainOptions, lower_train_step
+
+        mb = _pick_microbatches(cell, _batch_shards(mesh))
+        opts = TrainOptions(
+            microbatches=mb, remat=True,
+            grad_acc_sharded="grad_acc_spec" in opt_flags,
+            moe_combine_bf16="bf16_combine" in opt_flags,
+            ep_dispatch="a2a" if "ep_a2a" in opt_flags else "psum",
+            ep_zero3="ep_zero3" in opt_flags,
+            seq_parallel="seq_parallel" in opt_flags,
+        )
+        lowered, _ = lower_train_step(cfg, opts, mesh, plan, specs)
+        return lowered, {"microbatches": mb}
+
+    # Serving sharding policy: replicate params over `data` (no FSDP) when
+    # the TP-sharded copy fits comfortably in HBM — per-step weight
+    # all-gathers are pure decode latency. Fall back to FSDP only when a
+    # replica cannot fit (kimi-1t, jamba-398b).
+    params_shape = jax.eval_shape(
+        partial(M.init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    tp = mesh.shape.get("model", 1)
+    param_bytes_tp = sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(params_shape)) / tp
+    serve_fsdp = param_bytes_tp > 8e9  # > 8 GiB/chip replica -> shard over data
+    plan = shd.ShardingPlan.for_mesh(mesh, fsdp=serve_fsdp)
+    p_shard = shd.param_shardings(cfg, params_shape, mesh, plan)
+    in_shard_inputs = shd.input_shardings(specs, mesh, plan)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bs = _batch_shards(mesh)
+    act_batch_axes = batch_axes if cell.global_batch % bs == 0 else ()
+
+    ep = None
+    if (cfg.moe is not None and cfg.moe.num_experts % mesh.shape["model"] == 0
+            and act_batch_axes):
+        from repro.distributed.expert_parallel import EPShard
+
+        ep = EPShard(mesh, token_axes=act_batch_axes)
+
+    if cell.kind == "prefill":
+        ctx = M.ModelCtx(mesh=mesh, batch_axes=act_batch_axes, ep_shard=ep)
+
+        def prefill_step(params, batch):
+            return M.prefill(params, batch["tokens"], cfg, cell.seq_len,
+                             frontend_embed=batch.get("frontend_embed"),
+                             ctx=ctx)
+
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(p_shard, in_shard_inputs))
+        with mesh:
+            return jitted.lower(params_shape, specs), {}
+
+    # decode
+    ctx = M.ModelCtx(mesh=mesh, batch_axes=act_batch_axes, ep_shard=ep)
+    if cell.name == "long_500k" and cfg.family == "hybrid":
+        from repro.distributed.flash_decode import SeqShard
+
+        ctx = M.ModelCtx(seq_shard=SeqShard(mesh), mesh=mesh,
+                         batch_axes=act_batch_axes, ep_shard=ep)
+    state_shape = jax.eval_shape(
+        partial(M.init_decode_state, cfg=cfg, batch=cell.global_batch,
+                max_len=cell.seq_len, ctx=ctx))
+    s_specs = shd.decode_state_specs(cfg, state_shape, mesh, plan)
+    s_shard = shd.tree_shardings(s_specs, mesh)
+
+    def serve_step(params, state, batch):
+        return M.decode_step(params, state, batch["tokens"],
+                             jnp.int32(cell.seq_len - 1), cfg,
+                             frontend_embed=batch.get("frontend_embed"),
+                             ctx=ctx)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_shard, s_shard, in_shard_inputs),
+                     out_shardings=(None, s_shard),
+                     donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(params_shape, state_shape, specs), {}
+
+
+def _lower_emvs(cfg: ArchConfig, cell: ShapeCell, mesh,
+                opt_flags: frozenset = frozenset()):
+    from repro.core.camera import CameraModel
+    from repro.core.dsi import DSIConfig
+    from repro.distributed.emvs import emvs_input_specs, make_emvs_step
+
+    cam = CameraModel()
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=256)
+    multi = "pod" in mesh.axis_names
+    data = mesh.shape["data"]
+    if cell.name == "emvs_rt":
+        # one 1024-event packet, split into pose-identical slices so the
+        # event axis shards over `data` (votes are additive => exact)
+        frames, events = data, cell.seq_len // data
+    else:
+        frames, events = cell.global_batch, cell.seq_len
+    segments = 2 if multi else None
+    import jax.numpy as _jnp
+
+    step = make_emvs_step(
+        cam, dsi_cfg, mesh, pod_axis="pod" if multi else None,
+        vote_dtype=_jnp.int16 if "int16_votes" in opt_flags else _jnp.int32)
+    specs = emvs_input_specs(dsi_cfg, frames=frames, events=events,
+                             segments=segments)
+    from repro.distributed import sharding as shd
+
+    with mesh:
+        lowered = jax.jit(step).lower(specs["xy"], specs["valid"], specs["H"],
+                                      specs["phi"])
+    n_votes = (segments or 1) * frames * events * dsi_cfg.num_planes
+    return lowered, {"emvs_votes": n_votes,
+                     "model_flops_override": 5.0 * n_votes}
+
+
+# ---------------------------------------------------------------------------
+# Run one cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str,
+             opt_flags: frozenset = frozenset()) -> dict:
+    cfg = get_config(arch)
+    table = EMVS_CELLS if cfg.family == "emvs" else LM_CELLS
+    cell = table[cell_name]
+    skip = cell_skipped(cfg, cell)
+    rec: dict = {"arch": arch, "cell": cell_name, "mesh": mesh_kind,
+                 "opts": sorted(opt_flags)}
+    if skip:
+        rec["skipped"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+    lowered, extra = lower_cell(cfg, cell, mesh, opt_flags)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not support it
+        mem_rec = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    mf = extra.get("model_flops_override")
+    if mf is None:
+        mf = rf.model_flops_for_cell(cfg, cell)
+    roof = rf.analyze(cost, hlo, n_devices=n_dev, model_flops_global=mf,
+                      axis_size_hint=16)
+
+    rec.update({
+        "devices": n_dev,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": mem_rec,
+        "roofline": roof.to_json(),
+        **{k: v for k, v in extra.items() if k != "model_flops_override"},
+    })
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--cell")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--json", help="write single-cell record here")
+    ap.add_argument("--opts", default="", help="comma-separated beyond-paper optimizations: pad_heads,grad_acc_spec,bf16_combine,ep_a2a,int8_votes,seq_parallel")
+    args = ap.parse_args()
+
+    if args.all:
+        os.makedirs(args.out, exist_ok=True)
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = 0
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            table = EMVS_CELLS if cfg.family == "emvs" else LM_CELLS
+            for cell_name in table:
+                for mk in meshes:
+                    tag = f"{arch}__{cell_name}__{mk}".replace("/", "_")
+                    out_json = os.path.join(args.out, tag + ".json")
+                    if os.path.exists(out_json):
+                        print(f"[skip-cached] {tag}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--cell", cell_name,
+                           "--mesh", mk, "--json", out_json]
+                    print(f"[run] {tag}", flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=3600)
+                    if r.returncode != 0:
+                        failures += 1
+                        with open(out_json + ".err", "w") as f:
+                            f.write(r.stdout[-4000:] + "\n" + r.stderr[-8000:])
+                        print(f"[FAIL] {tag}: see {out_json}.err")
+        print(f"done; {failures} failures")
+        return 1 if failures else 0
+
+    opt_flags = frozenset(x for x in args.opts.split(",") if x)
+    rec = run_cell(args.arch, args.cell, args.mesh, opt_flags)
+    out = json.dumps(rec, indent=1, default=str)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            f.write(out)
+    print(out)
+    if "skipped" not in rec:
+        print(f"\nmemory_analysis: {rec['memory']}")
+        print(f"cost_analysis: flops={rec['roofline']['flops']:.3e} "
+              f"bytes={rec['roofline']['bytes_hbm']:.3e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

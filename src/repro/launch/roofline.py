@@ -1,0 +1,189 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_per_device / 819 GB/s (HBM)
+    collective = collective_bytes_per_device / 50 GB/s/link (ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` — the compiled module
+is already the per-device SPMD program, so its counts are per-chip.
+collective_bytes is parsed from the post-partitioning HLO text: the sum
+of operand sizes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (per assignment). We additionally report
+a link-time estimate that weights each kind by its ring cost
+(all-gather/reduce-scatter move (n-1)/n of the result per link;
+all-reduce 2x that) — the number the §Perf loop optimizes when the
+collective term dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# TPU v5e-like chip (per assignment)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shape(s) + op name, e.g.:
+#   %ar = bf16[128,1024] all-reduce(%x), replica_groups=...
+#   %ag = (f32[8,4], f32[8,4]) all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[dims] shape in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    operand_bytes: dict[str, int]  # per kind, summed result-shape bytes
+    total_bytes: int
+    link_time_s: float  # ring-model link-time estimate
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str, *, axis_size_hint: int = 16
+                      ) -> CollectiveStats:
+    """Sum collective payload bytes from post-partitioning HLO text.
+
+    Uses the op *result* shape as the payload proxy (for all-reduce /
+    all-to-all / collective-permute result == operand; for all-gather the
+    result is the gathered payload each device must receive; for
+    reduce-scatter the operand == result * n is what each device sends
+    through the ring in (n-1)/n pieces — we use result * ring factor).
+    `-start/-done` async pairs are counted once (on -start; bare ops too).
+    """
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    link_time = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        payload = _shape_bytes(shape_txt)
+        counts[kind] += 1
+        by_kind[kind] += payload
+        n = axis_size_hint
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            t = 2 * ring * payload / ICI_BW
+        elif kind in ("all-gather", "reduce-scatter"):
+            t = ring * payload / ICI_BW
+        elif kind == "all-to-all":
+            t = ring * payload / ICI_BW  # bisection-limited approximation
+        else:  # collective-permute: one hop
+            t = payload / ICI_BW
+        link_time += t
+    return CollectiveStats(counts=counts, operand_bytes=by_kind,
+                           total_bytes=sum(by_kind.values()),
+                           link_time_s=link_time)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device (trip-count-aware HLO dot flops)
+    bytes_hbm: float  # per device (op-level result+operand traffic)
+    collective_bytes: float  # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float  # 6*N_active*D tokens-based useful flops (global)
+    model_flops_per_device: float
+    useful_fraction: float  # model_flops_per_device / hlo flops
+    collectives: dict[str, Any]
+    cost_analysis_raw: dict[str, float]  # backend numbers (scan bodies x1!)
+    n_while: int
+    trip_counts: list
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(cost: dict, hlo_text: str, *, n_devices: int,
+            model_flops_global: float, axis_size_hint: int = 16) -> Roofline:
+    """Three-term roofline from the compiled per-device module.
+
+    FLOPs / HBM / collective bytes come from the trip-count-aware HLO
+    analyzer (launch/hlo_analysis.py) — the backend's cost_analysis()
+    counts scan bodies once and is kept only as a cross-check.
+    """
+    from repro.launch import hlo_analysis as ha
+
+    st = ha.analyze_text(hlo_text)
+    compute_s = st.flops / PEAK_FLOPS
+    memory_s = st.hbm_bytes / HBM_BW
+    collective_s = st.collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf_dev = model_flops_global / n_devices
+    return Roofline(
+        flops=st.flops, bytes_hbm=st.hbm_bytes,
+        collective_bytes=st.collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops_global, model_flops_per_device=mf_dev,
+        useful_fraction=(mf_dev / st.flops if st.flops else 0.0),
+        collectives={"counts": st.collective_counts,
+                     "bytes": st.collective_bytes_by_kind},
+        cost_analysis_raw={"flops": float(cost.get("flops", 0.0)),
+                           "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        n_while=st.n_while, trip_counts=st.trip_counts,
+    )
+
+
+def model_flops_for_cell(cfg, cell) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed this step.
+
+    decode cells process batch*1 new tokens but read the KV cache —
+    model_flops uses 2*N_active*tokens (fwd only) for serve cells and
+    6*N_active*tokens for train (fwd+bwd)."""
+    n_active = cfg.active_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = cell.global_batch * 1
+    flops = 2.0 * n_active * tokens
+    if cfg.n_heads:
+        # KV-cache attention reads: 2 * 2 * Hq * hd * S per token (qk + pv)
+        n_attn_layers = sum(1 for k in cfg.pattern() if k == "attn") \
+            * cfg.n_superblocks()
+        flops += (4.0 * cfg.n_heads * cfg.head_dim * cell.seq_len
+                  * n_attn_layers * tokens)
+    return flops

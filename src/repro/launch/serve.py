@@ -1,0 +1,72 @@
+"""Serving launcher: continuous-batching engine demo.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+        --requests 12 --slots 4 --max-new 16 [--int8-kv]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.engine import Engine, EngineConfig, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    eng = Engine(cfg, params,
+                 EngineConfig(slots=args.slots, max_len=args.max_len,
+                              temperature=args.temperature,
+                              kv_quantized=args.int8_kv,
+                              prefill_buckets=(32, 64, 128)),
+                 eos_id=-1)  # random weights never "finish"; run to budget
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        req = Request(rid=i,
+                      prompt=rng.integers(1, cfg.vocab_size, plen).astype(np.int32),
+                      max_new_tokens=args.max_new)
+        reqs.append(req)
+        eng.submit(req)
+
+    t0 = time.time()
+    steps = 0
+    while True:
+        st = eng.step()
+        steps += 1
+        if st["active"] == 0 and st["queued"] == 0:
+            break
+        if steps > 100000:
+            raise RuntimeError("engine did not drain")
+    dt = time.time() - t0
+    total_new = sum(len(r.generated) for r in reqs)
+    print(f"served {len(reqs)} requests / {total_new} tokens in {dt:.2f}s "
+          f"({total_new / dt:,.1f} tok/s, {steps} engine steps, "
+          f"int8_kv={args.int8_kv})")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt[:6]={r.prompt[:6].tolist()} "
+              f"-> generated[:8]={r.generated[:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM model zoo substrate: layers, attention, MoE, SSD, composed models."""

@@ -1,0 +1,214 @@
+"""GQA attention: RoPE, qk-norm, QKV-bias; three execution paths.
+
+  * `full`      — einsum attention, S <= FULL_ATTN_MAX_SEQ (training default)
+  * `blockwise` — online-softmax over KV chunks (differentiable flash in
+                  jnp): peak memory O(S * chunk) instead of O(S^2); used
+                  for long-sequence prefill/training
+  * Pallas      — `repro.kernels.flash_attention` (serving fast path)
+
+Decode-step attention (one query against a KV cache) lives here too; its
+sequence-sharded distributed variant (flash-decoding over the `data`
+axis) is in `repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import dense, init_dense, rms_norm
+
+Array = jax.Array
+
+FULL_ATTN_MAX_SEQ = 8192
+BLOCKWISE_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_sincos(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """positions (...,S) -> sin/cos (...,S, head_dim/2) fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array) -> Array:
+    """x: (B, S, H, D); sin/cos: (B?, S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    s = sin[..., None, :] if sin.ndim == x.ndim - 1 else sin
+    c = cos[..., None, :] if cos.ndim == x.ndim - 1 else cos
+    # rotate-half convention (Llama/Qwen)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads_eff, cfg.n_kv_heads_eff  # incl. sharding pad
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, hq * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_dense(ks[1], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_dense(ks[2], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_dense(ks[3], hq * hd, d, scale=(hq * hd) ** -0.5 / (2 * cfg.n_layers) ** 0.5,
+                         dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def mask_padded_heads(att: Array, cfg: ArchConfig) -> Array:
+    """Zero the padded heads' outputs: keeps the model function AND its
+    gradients identical to the unpadded arch (padded wo columns get zero
+    cotangents; padded q/k/v projections get zero gradients through the
+    mask), while head counts divide the TP degree."""
+    if cfg.head_pad == 0:
+        return att
+    mask = (jnp.arange(cfg.n_heads_eff) < cfg.n_heads).astype(att.dtype)
+    return att * mask[None, None, :, None]
+
+
+class QKV(NamedTuple):
+    q: Array  # (B, S, Hq, D)
+    k: Array  # (B, S, Hkv, D)
+    v: Array  # (B, S, Hkv, D)
+
+
+def qkv_project(params: dict, x: Array, cfg: ArchConfig, positions: Array) -> QKV:
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads_eff, cfg.n_kv_heads_eff, cfg.head_dim
+    q = dense(x, params["wq"]["w"], params["wq"].get("b")).reshape(b, s, hq, hd)
+    k = dense(x, params["wk"]["w"], params["wk"].get("b")).reshape(b, s, hkv, hd)
+    v = dense(x, params["wv"]["w"], params["wv"].get("b")).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    sin, cos = rope_sincos(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return QKV(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attention_full(q: Array, k: Array, v: Array, *, causal: bool = True) -> Array:
+    """(B, S, H, D) layout; einsum core; fp32 softmax."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / d ** 0.5
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def attention_blockwise(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        chunk: int = BLOCKWISE_CHUNK) -> Array:
+    """Online-softmax over KV chunks; O(S*chunk) live scores; differentiable.
+
+    Rectangular schedule (no triangle skip): every (q, kv-chunk) pair is
+    computed and masked — 2x FLOP overhead vs the Pallas kernel's block
+    skipping, traded for a dense, scan-friendly HLO (see EXPERIMENTS §Perf).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    assert skv % chunk == 0, (skv, chunk)
+    nk = skv // chunk
+    kc = k.reshape(b, nk, chunk, hkv, d)
+    vc = v.reshape(b, nk, chunk, hkv, d)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    scale = 1.0 / d ** 0.5
+
+    # carry (m, l) stats and acc in (B, Hq, Sq, ...) layout
+    m0 = jnp.full((b, hq, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, j = blk
+        kb = _repeat_kv(kb, g)
+        vb = _repeat_kv(vb, g)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where(kpos <= qpos, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        acc_new = acc * corr + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nk)),
+    )
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)  # (B, Hq, Sq, D)
+    return out.swapaxes(1, 2)  # (B, Sq, Hq, D)
+
+
+def attention_core(q: Array, k: Array, v: Array, *, causal: bool = True) -> Array:
+    """Dispatch on sequence length (full vs blockwise)."""
+    if k.shape[1] <= FULL_ATTN_MAX_SEQ:
+        return attention_full(q, k, v, causal=causal)
+    return attention_blockwise(q, k, v, causal=causal)
+
+
+def attention_decode(q: Array, k_cache: Array, v_cache: Array, length: Array) -> Array:
+    """One-token decode: q (B, 1, Hq, D); caches (B, Smax, Hkv, D).
+
+    `length` (B,) or scalar: number of valid cache entries (including the
+    token being decoded).
+    """
+    b, _, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qh = q[:, 0].reshape(b, hkv, g, d)  # group queries onto their kv head
+    # keep the cache in its storage dtype; fp32 happens in the MXU
+    # accumulator (preferred_element_type) — avoids materializing an
+    # fp32 copy of the (huge) cache
+    s = jnp.einsum("bhgd,bkhd->bhgk", qh, k_cache,
+                   preferred_element_type=jnp.float32) / d ** 0.5
+    pos = jnp.arange(smax)[None, None, None, :]
+    ln = jnp.asarray(length)
+    ln = ln[:, None, None, None] if ln.ndim == 1 else ln
+    s = jnp.where(pos < ln, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq * d).astype(q.dtype).reshape(b, 1, hq, d)
+
+
+def attention_out(params: dict, attn: Array) -> Array:
+    b, s = attn.shape[:2]
+    return dense(attn.reshape(b, s, -1), params["wo"]["w"])

@@ -1,0 +1,107 @@
+"""KV cache with optional int8 quantization.
+
+The int8 path instantiates the paper's hybrid-quantization principle
+(Table 1) for the LM substrate: K/V are stored as int8 with a per
+(position, kv-head) fp32 scale — an asymmetric-free, symmetric linear
+quantizer, matching the paper's linear fixed-point scheme. Memory per
+cached token drops 2x vs bf16 (the paper's "up to 50%" claim, ported).
+
+Layout: (B, Smax, Hkv, D) — sequence-major so the sequence axis can be
+sharded for distributed flash-decoding (long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, Smax, Hkv, D) bf16 — or int8 when quantized
+    v: Array
+    k_scale: Array | None = None  # (B, Smax, Hkv, 1) fp32 when quantized
+    v_scale: Array | None = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+def init_cache(batch: int, max_len: int, n_kv: int, d_head: int, *,
+               quantized: bool = False, dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, n_kv, d_head)
+    if quantized:
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros((batch, max_len, n_kv, 1), jnp.float32),
+            v_scale=jnp.zeros((batch, max_len, n_kv, 1), jnp.float32),
+        )
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    """Symmetric int8 per (pos, head): x ≈ q * scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = amax / 127.0
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-12))
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize(q: Array, scale: Array, dtype=jnp.bfloat16) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def write_cache(cache: KVCache, k_new: Array, v_new: Array, pos: Array) -> KVCache:
+    """Insert (B, S_new, Hkv, D) at sequence offset `pos` (scalar int32)."""
+    if cache.quantized:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        return KVCache(
+            k=jax.lax.dynamic_update_slice_in_dim(cache.k, kq, pos, axis=1),
+            v=jax.lax.dynamic_update_slice_in_dim(cache.v, vq, pos, axis=1),
+            k_scale=jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, pos, axis=1),
+            v_scale=jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, pos, axis=1),
+        )
+    return KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                              pos, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                              pos, axis=1),
+    )
+
+
+def write_cache_batched(cache: KVCache, k_new: Array, v_new: Array,
+                        pos: Array) -> KVCache:
+    """Insert one token per slot at per-slot positions `pos` (B,).
+
+    One-hot masked update (shape-stable, scatter-free): traffic is one
+    full cache read+write — the same order as the decode attention read.
+    """
+    b, smax = cache.k.shape[:2]
+    hot = (jnp.arange(smax)[None, :] == pos[:, None])[..., None, None]  # (B,S,1,1)
+
+    def put(old: Array, new: Array) -> Array:
+        return jnp.where(hot, new.astype(old.dtype), old)
+
+    if cache.quantized:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        return KVCache(k=put(cache.k, kq), v=put(cache.v, vq),
+                       k_scale=put(cache.k_scale, ks),
+                       v_scale=put(cache.v_scale, vs))
+    return KVCache(k=put(cache.k, k_new), v=put(cache.v, v_new))
+
+
+def read_cache(cache: KVCache, dtype=jnp.bfloat16) -> tuple[Array, Array]:
+    """Materialize dequantized K, V (full length; mask handles validity)."""
+    if cache.quantized:
+        return (dequantize(cache.k, cache.k_scale, dtype),
+                dequantize(cache.v, cache.v_scale, dtype))
+    return cache.k, cache.v
+
+
+def cache_bytes(cache: KVCache) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))

@@ -1,0 +1,84 @@
+"""Shared layers: norms, embeddings, MLPs. Pure functions over param dicts.
+
+Convention: params are nested dicts of jax arrays; layer-stacked variants
+carry a leading super-block axis for `lax.scan`. Compute dtype follows the
+inputs (bf16 in production); normalization statistics and softmax run in
+fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def dense(x: Array, w: Array, b: Array | None = None) -> Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.bfloat16) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def mlp(params: dict, x: Array, variant: str = "swiglu") -> Array:
+    """Position-wise feed-forward. swiglu: 3 matrices; gelu: 2 matrices."""
+    if variant == "swiglu":
+        gate = dense(x, params["w_gate"])
+        up = dense(x, params["w_up"])
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        return dense(act, params["w_down"])
+    if variant == "gelu":
+        up = dense(x, params["w_up"], params.get("b_up"))
+        act = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+        return dense(act, params["w_down"], params.get("b_down"))
+    raise ValueError(variant)
+
+
+def init_mlp(key, d_model: int, d_ff: int, variant: str = "swiglu",
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    if variant == "swiglu":
+        return {
+            "w_gate": init_dense(ks[0], d_model, d_ff, dtype=dtype)["w"],
+            "w_up": init_dense(ks[1], d_model, d_ff, dtype=dtype)["w"],
+            "w_down": init_dense(ks[2], d_ff, d_model, dtype=dtype)["w"],
+        }
+    return {
+        "w_up": init_dense(ks[0], d_model, d_ff, dtype=dtype)["w"],
+        "w_down": init_dense(ks[1], d_ff, d_model, dtype=dtype)["w"],
+    }
+
+
+def embed(tokens: Array, table: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def init_embed(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def unembed(x: Array, table_or_head: Array) -> Array:
+    """Logits in fp32 (loss-critical)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table_or_head.astype(jnp.float32))

@@ -1,0 +1,272 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked dual form.
+
+The SSD recurrence (Dao & Gu, arXiv:2405.21060) for one head:
+
+    h_t = a_t * h_{t-1} + b_t x_t^T        h in R^{N x P}
+    y_t = C_t h_t + D x_t
+
+with a_t = exp(-dt_t * A), b_t = dt_t * B_t. The *chunked dual form*
+splits the sequence into chunks of length Q and computes, per chunk:
+
+  intra-chunk (quadratic, runs on the MXU):
+      y_intra = ((C B^T) ∘ L) (dt · X)     L = causal decay mask
+  inter-chunk (linear recurrence over chunk states):
+      S_c   = sum_t decay_to_end(t) * b_t x_t^T    (chunk state, N x P)
+      h_c   = a_chunk * h_{c-1} + S_c              (scan over chunks)
+      y_inter = C_t * decay_from_start(t) * h_{c-1}
+
+Both terms are batched matmuls — MXU friendly — while the sequential
+scan runs only over S/Q chunk steps: the TPU-native analogue of the
+paper's DSI-level parallelism (parallel within a tile, tiny serial
+chain across tiles).
+
+Tensor parallelism: projections are SPLIT per stream (w_z, w_x, w_B,
+w_C, w_dt) rather than one fused in_proj, so z/x/dt (head-aligned) can
+shard over the `model` axis while B/C (shared across heads) replicate.
+A fused projection would force one sharding onto all five segments.
+out_proj is row-parallel (the same all-reduce as attention's wo).
+
+Decode path: explicit single-step recurrence on a carried (H, N, P)
+state — O(1) per token, which is why `mamba2-2.7b` and the Jamba
+hybrid run the `long_500k` cell while pure-attention archs skip it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import dense, init_dense, rms_norm
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    """Decode-time carried state for one Mamba-2 layer."""
+
+    conv_x: Array  # (B, K-1, d_inner) rolling conv window of x
+    conv_B: Array  # (B, K-1, N)
+    conv_C: Array  # (B, K-1, N)
+    ssd: Array  # (B, H, N, P)  SSD recurrent state
+
+
+def _dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    sc = cfg.ssm
+    d_in = sc.d_inner(cfg.d_model)
+    nh = sc.num_heads(cfg.d_model)
+    return d_in, nh, sc.d_state, sc.head_dim
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    sc = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, n, _ = _dims(cfg)
+    ks = jax.random.split(key, 6)
+
+    def conv_w(k, c):
+        return (jax.random.normal(k, (sc.conv_kernel, c), jnp.float32)
+                * (1.0 / sc.conv_kernel) ** 0.5).astype(dtype)
+
+    kc = jax.random.split(ks[5], 3)
+    return {
+        "w_z": init_dense(ks[0], d, d_in, dtype=dtype),
+        "w_x": init_dense(ks[1], d, d_in, dtype=dtype),
+        "w_B": init_dense(ks[2], d, n, dtype=dtype),
+        "w_C": init_dense(ks[3], d, n, dtype=dtype),
+        "w_dt": init_dense(ks[4], d, nh, dtype=dtype),
+        "conv_x_w": conv_w(kc[0], d_in), "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_B_w": conv_w(kc[1], n), "conv_B_b": jnp.zeros((n,), dtype),
+        "conv_C_w": conv_w(kc[2], n), "conv_C_b": jnp.zeros((n,), dtype),
+        # per-head A (negative; stored as log), dt bias, D skip
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_dense(kc[0], d_in, d,
+                               scale=d_in ** -0.5 / (2 * max(cfg.n_layers, 1)) ** 0.5,
+                               dtype=dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, kernel K: (B, S, C) -> (B, S, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K is 4: unrolled adds, no gather
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, B: Array, C: Array, D: Array,
+                chunk: int, h0: Array | None = None) -> tuple[Array, Array]:
+    """Chunked SSD core.
+
+    x:  (Bt, S, H, P)   dt: (Bt, S, H) pre-softplus   A: (H,) decay rates
+    B, C: (Bt, S, N)    D: (H,)
+    Returns (y (Bt, S, H, P), h_final (Bt, H, N, P) fp32).
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    s_orig = s
+    if s % chunk:  # pad to a chunk multiple; padded steps are inert:
+        pad = chunk - s % chunk  # dt=-1e4 -> softplus ~ 0 -> decay 1, no input
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-1e4)
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (Bt,S,H) positive
+    # discretized log-decay per step: log a_t = -dt * A
+    la = -dt * A[None, None, :]  # (Bt,S,H) negative
+
+    xc = x.reshape(bt, nc, chunk, h, p)
+    dtc = dt.reshape(bt, nc, chunk, h)
+    lac = la.reshape(bt, nc, chunk, h)
+    Bc = B.reshape(bt, nc, chunk, n)
+    Cc = C.reshape(bt, nc, chunk, n)
+
+    # cumulative log decay within each chunk (inclusive)
+    cum = jnp.cumsum(lac, axis=2)  # (Bt,nc,Q,H)
+    total = cum[:, :, -1:, :]  # (Bt,nc,1,H) full-chunk decay
+
+    # --- intra-chunk: ((C B^T) ∘ L) (dt*x) -----------------------------
+    # L[t,u] = exp(cum[t] - cum[u]) for t >= u  (decay over u+1..t)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (Bt,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask BEFORE exp: upper-triangle diff is positive and can overflow to
+    # inf; where(mask, inf, 0) is fine forward but 0*inf => NaN in backward
+    L = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))  # (Bt,nc,Q,Q)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # (Bt,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores[..., None] * L, xdt)
+
+    # --- chunk states and inter-chunk scan ------------------------------
+    # state contribution of step u: decay over u+1..end  *  b_u x_u^T
+    decay_to_end = jnp.exp(total - cum)  # (Bt,nc,Q,H)
+    S_c = jnp.einsum("bckn,bckh,bckhp->bchnp", Bc.astype(jnp.float32),
+                     decay_to_end * dtc, xc.astype(jnp.float32))  # (Bt,nc,H,N,P)
+    a_chunk = jnp.exp(total[:, :, 0, :])  # (Bt,nc,H)
+
+    def scan_fn(hprev, inp):
+        a_c, s_c = inp  # (Bt,H), (Bt,H,N,P)
+        hnew = hprev * a_c[..., None, None] + s_c
+        return hnew, hprev  # emit state *entering* the chunk
+
+    hinit = (jnp.zeros((bt, h, n, p), jnp.float32) if h0 is None
+             else h0.astype(jnp.float32))
+    h_final, h_enter = jax.lax.scan(
+        scan_fn, hinit, (a_chunk.swapaxes(0, 1), S_c.swapaxes(0, 1)))
+    h_enter = h_enter.swapaxes(0, 1)  # (Bt,nc,H,N,P)
+
+    # --- inter-chunk output: C_t decay(start..t) h_enter ----------------
+    decay_from_start = jnp.exp(cum)  # (Bt,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc.astype(jnp.float32),
+                         decay_from_start, h_enter)
+
+    y = (y_intra + y_inter).reshape(bt, s, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y[:, :s_orig].astype(x.dtype), h_final
+
+
+def _project(params: dict, x: Array) -> tuple[Array, Array, Array, Array, Array]:
+    return (dense(x, params["w_z"]["w"]),
+            dense(x, params["w_x"]["w"]),
+            dense(x, params["w_B"]["w"]),
+            dense(x, params["w_C"]["w"]),
+            dense(x, params["w_dt"]["w"]))
+
+
+def _finish(params: dict, y: Array, z: Array, cfg: ArchConfig) -> Array:
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    return dense(y, params["out_proj"]["w"])
+
+
+def mamba2_forward(params: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Full Mamba-2 layer (training). x: (B, S, D) -> (B, S, D)."""
+    out, _ = mamba2_prefill(params, x, cfg, want_state=False)
+    return out
+
+
+def mamba2_prefill(params: dict, x: Array, cfg: ArchConfig, *,
+                   want_state: bool = True) -> tuple[Array, SSMState | None]:
+    """Forward returning the decode-ready state (conv windows + SSD state)."""
+    sc = cfg.ssm
+    d_in, nh, n, p = _dims(cfg)
+    bt, s = x.shape[:2]
+    z, xs, B, C, dt = _project(params, x)
+    km1 = sc.conv_kernel - 1
+    if want_state:
+        def tail(a: Array) -> Array:  # last K-1 pre-conv inputs (pad short seqs)
+            a = a if s >= km1 else jnp.pad(a, ((0, 0), (km1 - s, 0), (0, 0)))
+            return a[:, -km1:, :]
+        tails = (tail(xs), tail(B), tail(C))
+    xs = _causal_conv(xs, params["conv_x_w"], params["conv_x_b"])
+    B = _causal_conv(B, params["conv_B_w"], params["conv_B_b"])
+    C = _causal_conv(C, params["conv_C_w"], params["conv_C_b"])
+    A = jnp.exp(params["A_log"])
+    y, h_fin = ssd_chunked(
+        xs.reshape(bt, s, nh, p),
+        dt + params["dt_bias"][None, None, :],
+        A, B, C, params["D"], chunk=min(sc.chunk_size, s),
+    )
+    out = _finish(params, y.reshape(bt, s, d_in), z, cfg)
+    if not want_state:
+        return out, None
+    state = SSMState(conv_x=tails[0], conv_B=tails[1], conv_C=tails[2],
+                     ssd=h_fin.astype(jnp.float32))
+    return out, state
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    sc = cfg.ssm
+    d_in, nh, n, p = _dims(cfg)
+    km1 = sc.conv_kernel - 1
+    return SSMState(
+        conv_x=jnp.zeros((batch, km1, d_in), dtype),
+        conv_B=jnp.zeros((batch, km1, n), dtype),
+        conv_C=jnp.zeros((batch, km1, n), dtype),
+        ssd=jnp.zeros((batch, nh, n, p), jnp.float32),
+    )
+
+
+def _conv_step(window: Array, x_t: Array, w: Array, b: Array
+               ) -> tuple[Array, Array]:
+    """One causal-conv step. window (B,K-1,C) + x_t (B,C) -> (out, new window)."""
+    full = jnp.concatenate([window, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32), w.astype(jnp.float32))
+    out = jax.nn.silu(out + b.astype(jnp.float32))
+    return out, full[:, 1:, :].astype(window.dtype)
+
+
+def mamba2_decode_step(params: dict, x: Array, state: SSMState, cfg: ArchConfig
+                       ) -> tuple[Array, SSMState]:
+    """One-token decode. x: (B, 1, D); O(1) state update (no KV growth)."""
+    d_in, nh, n, p = _dims(cfg)
+    z, xs, B, C, dt = _project(params, x)
+    xs_t, new_cx = _conv_step(state.conv_x, xs[:, 0], params["conv_x_w"],
+                              params["conv_x_b"])
+    B_t, new_cb = _conv_step(state.conv_B, B[:, 0], params["conv_B_w"],
+                             params["conv_B_b"])
+    C_t, new_cc = _conv_step(state.conv_C, C[:, 0], params["conv_C_w"],
+                             params["conv_C_b"])
+    xs_t = xs_t.reshape(-1, nh, p)  # (B,H,P)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                           + params["dt_bias"][None, :])  # (B,H)
+    A = jnp.exp(params["A_log"])
+    a_t = jnp.exp(-dt_t * A[None, :])  # (B,H)
+
+    h = state.ssd.astype(jnp.float32)
+    h = (h * a_t[..., None, None]
+         + jnp.einsum("bn,bh,bhp->bhnp", B_t, dt_t, xs_t))
+    y = jnp.einsum("bn,bhnp->bhp", C_t, h) + xs_t * params["D"][None, :, None]
+    y = y.reshape(-1, 1, d_in).astype(x.dtype)
+    out = _finish(params, y, z, cfg)
+    return out, SSMState(conv_x=new_cx, conv_B=new_cb, conv_C=new_cc,
+                         ssd=h.astype(state.ssd.dtype))

@@ -1,0 +1,415 @@
+"""LM model assembly: init / forward / prefill / decode for all 10 archs.
+
+Structure (DESIGN.md §6): the layer stack is a `lax.scan` over
+*super-blocks* — the arch's repeating pattern (dense/MoE: 1 layer;
+Jamba: 8 layers, attention at position 4; Mamba-2: 1 SSM layer). Params
+for pattern position i are stacked with a leading (n_superblocks,) axis,
+so HLO size is constant in depth and GSPMD shards every layer
+identically.
+
+Decode state is a tuple over pattern positions: KVCache for "attn"
+positions, SSMState for "mamba" positions — both stacked over
+super-blocks and scanned through (xs in, updated ys out).
+
+MoE execution: `ep_shard` in ModelCtx selects the shard_map
+expert-parallel path (production); ep_shard=None runs the single-device
+path (smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import mamba2 as m2
+from repro.models.attention import (
+    attention_core,
+    attention_decode,
+    attention_out,
+    init_attention,
+    mask_padded_heads,
+    qkv_project,
+)
+from repro.models.kv_cache import (
+    KVCache,
+    init_cache,
+    read_cache,
+    write_cache,
+    write_cache_batched,
+)
+from repro.models.layers import (
+    embed,
+    init_embed,
+    init_mlp,
+    init_rms_norm,
+    mlp,
+    rms_norm,
+    unembed,
+)
+from repro.models.moe import init_moe, moe_apply
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Execution context: distribution + cache policy knobs."""
+
+    ep_shard: Optional[Any] = None  # distributed.EPShard | None
+    seq_shard: Optional[Any] = None  # distributed.SeqShard | None (flash-decode)
+    kv_quantized: bool = False
+    remat: bool = False  # checkpoint each super-block (training)
+    mesh: Optional[Any] = None  # sharding-constraint anchor mesh
+    batch_axes: tuple = ()  # activation batch-dim mesh axes
+    seq_axis: Optional[str] = None  # sequence-parallel axis (perf option)
+
+    def constrain(self, x: Array) -> Array:
+        """Pin activation sharding: (B, S, D) batch over batch_axes.
+
+        Without this anchor GSPMD is free to replicate activations over
+        the data axis through the layer stack (observed: 16x redundant
+        attention compute + full-batch S^2 score tensors per device).
+        Optionally shards S over `seq_axis` (sequence parallelism).
+        """
+        if self.mesh is None or x.ndim != 3:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        spec = P(self.batch_axes if self.batch_axes else None,
+                 self.seq_axis, None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, kind: str, pos_in_pattern: int,
+                dtype) -> dict:
+    """One layer (pattern position): mixer + MLP/MoE + norms."""
+    ks = jax.random.split(key, 2)
+    p: dict = {"norm1": init_rms_norm(cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+        p["norm2"] = init_rms_norm(cfg.d_model)
+        p["ffn"] = _init_ffn(ks[1], cfg, pos_in_pattern, dtype)
+    elif kind == "mamba":
+        p["mamba"] = m2.init_mamba2(ks[0], cfg, dtype)
+        if cfg.family == "hybrid":  # Jamba: every layer has its own MLP/MoE
+            p["norm2"] = init_rms_norm(cfg.d_model)
+            p["ffn"] = _init_ffn(ks[1], cfg, pos_in_pattern, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_ffn(key, cfg: ArchConfig, pos_in_pattern: int, dtype) -> dict:
+    if cfg.moe is not None and not (
+            cfg.moe.layout == "alternate" and pos_in_pattern % 2 == 1):
+        return {"moe": init_moe(key, cfg, dtype)}
+    return {"dense": init_mlp(key, cfg.d_model, cfg.d_ff, cfg.mlp_variant, dtype)}
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    """Full parameter tree. Super-block params stacked on axis 0."""
+    pat = cfg.pattern()
+    n_sb = cfg.n_superblocks()
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    def one_superblock(k):
+        kk = jax.random.split(k, len(pat))
+        return tuple(
+            _init_block(kk[i], cfg, kind, i, dtype) for i, kind in enumerate(pat)
+        )
+
+    blocks = jax.vmap(one_superblock)(jax.random.split(k_blocks, n_sb))
+    params = {
+        "embed": init_embed(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (training / prefill path)
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn(p_ffn: dict, x: Array, cfg: ArchConfig, ctx: ModelCtx
+               ) -> tuple[Array, dict]:
+    b, s, d = x.shape
+    if "dense" in p_ffn:
+        return mlp(p_ffn["dense"], x, cfg.mlp_variant), {}
+    xt = x.reshape(b * s, d)
+    if ctx.ep_shard is not None:
+        y, metrics = ctx.ep_shard.moe(p_ffn["moe"], xt, cfg)
+    else:
+        y, metrics = moe_apply(p_ffn["moe"], xt, cfg)
+    return y.reshape(b, s, d), metrics
+
+
+def _block_forward(p: dict, x: Array, kind: str, cfg: ArchConfig,
+                   positions: Array, ctx: ModelCtx) -> tuple[Array, dict]:
+    metrics: dict = {}
+    h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+    if kind == "attn":
+        qkv = qkv_project(p["attn"], h, cfg, positions)
+        att = mask_padded_heads(
+            attention_core(qkv.q, qkv.k, qkv.v, causal=True), cfg)
+        x = x + attention_out(p["attn"], att)
+    else:
+        x = x + m2.mamba2_forward(p["mamba"], h, cfg)
+    if "ffn" in p:
+        h2 = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+        y, metrics = _apply_ffn(p["ffn"], h2, cfg, ctx)
+        x = x + y
+    return x, metrics
+
+
+def _superblock_forward(sb_params: tuple, x: Array, cfg: ArchConfig,
+                        positions: Array, ctx: ModelCtx) -> tuple[Array, Array]:
+    aux = jnp.float32(0.0)
+    for i, kind in enumerate(cfg.pattern()):
+        x = ctx.constrain(x)
+        x, metrics = _block_forward(sb_params[i], x, kind, cfg, positions, ctx)
+        aux = aux + metrics.get("moe_aux", 0.0)
+    return ctx.constrain(x), aux
+
+
+def _embed_inputs(params: dict, tokens: Array, cfg: ArchConfig,
+                  frontend_embed: Array | None) -> Array:
+    x = embed(tokens, params["embed"]["table"])
+    if frontend_embed is not None:
+        fe = frontend_embed.astype(x.dtype)
+        if cfg.frontend == "vision_patches":
+            # patch embeddings occupy the first n_front positions (anyres stub)
+            x = jax.lax.dynamic_update_slice_in_dim(x, fe, 0, axis=1)
+        elif cfg.frontend == "audio_frames":
+            # EnCodec frame embeddings added to code-token embeddings (stub)
+            x = x + fe
+    return x
+
+
+def forward(params: dict, tokens: Array, cfg: ArchConfig,
+            *, frontend_embed: Array | None = None,
+            ctx: ModelCtx = ModelCtx()) -> tuple[Array, Array]:
+    """Training/prefill forward. tokens (B, S) -> (logits (B,S,V) fp32, aux)."""
+    x = ctx.constrain(_embed_inputs(params, tokens, cfg, frontend_embed))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+
+    def body(carry, sb_params):
+        x, aux = carry
+        x, a = _superblock_forward(sb_params, x, cfg, positions, ctx)
+        return (x, aux + a), None
+
+    if ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, table), aux / max(cfg.n_layers, 1)
+
+
+def loss_fn(params: dict, tokens: Array, targets: Array, cfg: ArchConfig,
+            *, frontend_embed: Array | None = None,
+            ctx: ModelCtx = ModelCtx()) -> tuple[Array, dict]:
+    """Next-token cross-entropy (+ MoE aux + z-loss). targets = shifted ids."""
+    logits, aux = forward(params, tokens, cfg, frontend_embed=frontend_embed,
+                          ctx=ctx)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    zloss = 1e-4 * (logz ** 2).mean()
+    moe_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    loss = nll + zloss + moe_w * aux
+    return loss, {"nll": nll, "zloss": zloss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      ctx: ModelCtx = ModelCtx(), dtype=jnp.bfloat16) -> tuple:
+    """Per-pattern-position state, stacked over super-blocks (axis 0)."""
+    n_sb = cfg.n_superblocks()
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_sb,) + a.shape), tree)
+
+    state = []
+    for kind in cfg.pattern():
+        if kind == "attn":
+            state.append(stack(init_cache(batch, max_len, cfg.n_kv_heads_eff,
+                                          cfg.head_dim, quantized=ctx.kv_quantized,
+                                          dtype=dtype)))
+        else:
+            state.append(stack(m2.mamba2_init_state(cfg, batch, dtype=jnp.float32)))
+    return tuple(state)
+
+
+def prefill(params: dict, tokens: Array, cfg: ArchConfig, max_len: int,
+            *, frontend_embed: Array | None = None,
+            ctx: ModelCtx = ModelCtx(),
+            logit_index: Array | None = None) -> tuple[Array, tuple]:
+    """Process the prompt; return (logits at one position, decode state).
+
+    `logit_index`: position whose logits to return (default: last). Lets
+    the serving engine right-pad prompts to a compile bucket and still
+    read the logits of the true last prompt token.
+    """
+    x = _embed_inputs(params, tokens, cfg, frontend_embed)
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    state0 = init_decode_state(cfg, b, max_len, ctx, dtype=x.dtype)
+
+    def body(x, scanned):
+        sb_params, sb_state = scanned
+        new_state = []
+        for i, kind in enumerate(cfg.pattern()):
+            p = sb_params[i]
+            x = ctx.constrain(x)
+            h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+            if kind == "attn":
+                qkv = qkv_project(p["attn"], h, cfg, positions)
+                att = mask_padded_heads(
+                    attention_core(qkv.q, qkv.k, qkv.v, causal=True), cfg)
+                x = x + attention_out(p["attn"], att)
+                new_state.append(write_cache(sb_state[i], qkv.k, qkv.v,
+                                             jnp.int32(0)))
+            else:
+                y, st = m2.mamba2_prefill(p["mamba"], h, cfg)
+                x = x + y
+                old = sb_state[i]
+                new_state.append(jax.tree.map(
+                    lambda new, o: new.astype(o.dtype), st, old))
+            if "ffn" in p:
+                h2 = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+                y2, _ = _apply_ffn(p["ffn"], h2, cfg, ctx)
+                x = x + y2
+        return x, tuple(new_state)
+
+    x, state = jax.lax.scan(body, x, (params["blocks"], state0))
+    if logit_index is None:
+        x = x[:, -1:]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(x, jnp.asarray(logit_index), 1, axis=1)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, table), state
+
+
+def decode_step(params: dict, state: tuple, tokens: Array, cur_len: Array,
+                cfg: ArchConfig, *, frontend_embed: Array | None = None,
+                ctx: ModelCtx = ModelCtx()) -> tuple[Array, tuple]:
+    """One-token decode. tokens (B, 1); cur_len scalar int32 = tokens so far.
+
+    Attention positions: the new token sits at index cur_len; its KV is
+    written there and attends to cache[:cur_len+1].
+    """
+    x = _embed_inputs(params, tokens, cfg, frontend_embed)
+    positions = jnp.full((1, 1), cur_len, jnp.int32)
+
+    def body(x, scanned):
+        sb_params, sb_state = scanned
+        new_state = []
+        for i, kind in enumerate(cfg.pattern()):
+            p = sb_params[i]
+            x = ctx.constrain(x)
+            h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+            if kind == "attn":
+                qkv = qkv_project(p["attn"], h, cfg, positions)
+                cache = write_cache(sb_state[i], qkv.k, qkv.v, cur_len)
+                k, v = read_cache(cache, x.dtype)
+                if ctx.seq_shard is not None:
+                    att = ctx.seq_shard.decode_attention(qkv.q, k, v, cur_len + 1)
+                else:
+                    att = attention_decode(qkv.q, k, v, cur_len + 1)
+                att = mask_padded_heads(att, cfg)
+                x = x + attention_out(p["attn"], att)
+                new_state.append(cache)
+            else:
+                y, st = m2.mamba2_decode_step(p["mamba"], h, sb_state[i], cfg)
+                x = x + y
+                new_state.append(st)
+            if "ffn" in p:
+                h2 = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+                y2, _ = _apply_ffn(p["ffn"], h2, cfg, ctx)
+                x = x + y2
+        return x, tuple(new_state)
+
+    x, state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, table), state
+
+
+def decode_step_batched(params: dict, state: tuple, tokens: Array,
+                        lengths: Array, cfg: ArchConfig, *,
+                        frontend_embed: Array | None = None,
+                        ctx: ModelCtx = ModelCtx()) -> tuple[Array, tuple]:
+    """Continuous-batching decode: per-slot lengths (B,).
+
+    Each slot's new KV is written at its own position (one-hot masked
+    update) and attends to its own `lengths[b]+1` valid cache entries.
+    """
+    x = _embed_inputs(params, tokens, cfg, frontend_embed)
+    positions = lengths[:, None].astype(jnp.int32)  # (B,1) per-slot RoPE pos
+
+    def body(x, scanned):
+        sb_params, sb_state = scanned
+        new_state = []
+        for i, kind in enumerate(cfg.pattern()):
+            p = sb_params[i]
+            x = ctx.constrain(x)
+            h = rms_norm(x, p["norm1"]["scale"], cfg.norm_eps)
+            if kind == "attn":
+                qkv = qkv_project(p["attn"], h, cfg, positions)
+                cache = write_cache_batched(sb_state[i], qkv.k, qkv.v, lengths)
+                k, v = read_cache(cache, x.dtype)
+                att = mask_padded_heads(
+                    attention_decode(qkv.q, k, v, lengths + 1), cfg)
+                x = x + attention_out(p["attn"], att)
+                new_state.append(cache)
+            else:
+                y, st = m2.mamba2_decode_step(p["mamba"], h, sb_state[i], cfg)
+                x = x + y
+                new_state.append(st)
+            if "ffn" in p:
+                h2 = rms_norm(x, p["norm2"]["scale"], cfg.norm_eps)
+                y2, _ = _apply_ffn(p["ffn"], h2, cfg, ctx)
+                x = x + y2
+        return x, tuple(new_state)
+
+    x, state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, table), state
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def splice_slot(state: tuple, pstate: tuple, slot: Array) -> tuple:
+    """Copy a prefilled batch-1 decode state into slot `slot` of a batched
+    engine state (continuous-batching admission)."""
+
+    def put(s, p):
+        return jax.lax.dynamic_update_slice_in_dim(
+            s, p.astype(s.dtype), slot, axis=1)
+
+    return jax.tree.map(put, state, pstate)
+
+
+def param_count(params: dict) -> int:
+    return sum(a.size for a in jax.tree.leaves(params))

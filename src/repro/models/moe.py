@@ -1,0 +1,179 @@
+"""Mixture-of-Experts: top-k router, shared experts, expert parallelism.
+
+Production path (`moe_apply` under a mesh): activations are replicated
+across the `model` axis at block boundaries (Megatron-style TP), so each
+model-axis device holds the full local token set AND a 1/|model| slice of
+the experts. Expert parallelism then needs NO all_to_all: every device
+
+  1. routes identically (router weights replicated, tokens identical),
+  2. gathers the tokens destined for ITS experts into a capacity-bounded
+     (E_local, C) table,
+  3. runs its experts' FFN,
+  4. scatter-adds weighted outputs into a local (T, D) buffer,
+  5. one psum over `model` completes the combine — the same single
+     all-reduce a dense Megatron MLP layer would issue.
+
+This trades dispatch all_to_all bandwidth (2 * T * k * D / |model|) for
+the layer-output all-reduce the TP block already pays — a good default
+when activations are TP-replicated. The all_to_all dispatch variant is
+evaluated as a perf iteration in EXPERIMENTS.md §Perf.
+
+Capacity: C = ceil(T * top_k * capacity_factor / E) tokens per expert;
+overflow drops (GShard-style) — the approximate-computing lever the paper
+applies to voting (nearest vs bilinear), instantiated for routing; the
+dropped-token fraction is monitored in metrics.
+
+The same code runs without a mesh (smoke tests): axis_name=None makes the
+psum a no-op and every "device" holds all experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, MoEConfig
+from repro.models.layers import init_dense, init_mlp, mlp
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    mc = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    n_mats = 3 if cfg.mlp_variant == "swiglu" else 2
+    del n_mats
+    scale = d ** -0.5
+
+    def expert_stack(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "w_gate": (jax.random.normal(kk[0], (mc.num_experts, d, mc.d_ff_expert),
+                                         jnp.float32) * scale).astype(dtype),
+            "w_up": (jax.random.normal(kk[1], (mc.num_experts, d, mc.d_ff_expert),
+                                       jnp.float32) * scale).astype(dtype),
+            "w_down": (jax.random.normal(kk[2], (mc.num_experts, mc.d_ff_expert, d),
+                                         jnp.float32) * scale
+                       / (2 * cfg.n_layers) ** 0.5).astype(dtype),
+        }
+
+    p = {
+        "router": init_dense(ks[0], d, mc.num_experts, dtype=jnp.float32),
+        "experts": expert_stack(ks[1]),
+    }
+    if mc.num_shared_experts:
+        p["shared"] = init_mlp(ks[2], d, mc.d_ff_expert * mc.num_shared_experts,
+                               cfg.mlp_variant, dtype=dtype)
+    return p
+
+
+def router_probs(params: dict, x: Array, mc: MoEConfig) -> tuple[Array, Array, Array]:
+    """Return (top-k gates (T,k), top-k expert ids (T,k), aux loss scalar)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, mc.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renorm
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e = mc.num_experts
+    counts = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    p_mean = probs.mean(0)
+    aux = e * jnp.sum(f * p_mean)
+    return gates, idx, aux
+
+
+def _capacity(tokens: int, mc: MoEConfig) -> int:
+    c = int(tokens * mc.top_k * mc.capacity_factor / mc.num_experts) + 1
+    return max(c, 4)
+
+
+def moe_apply(
+    params: dict,
+    x: Array,  # (T, D) local tokens (flattened batch*seq)
+    cfg: ArchConfig,
+    *,
+    axis_name: str | None = None,
+    ep_size: int = 1,
+    ep_index: Array | int = 0,
+    combine_dtype=jnp.float32,  # bf16 halves the combine-psum payload
+) -> tuple[Array, dict]:
+    """Expert-parallel MoE forward. Returns (y (T, D), metrics)."""
+    mc = cfg.moe
+    t, d = x.shape
+    e = mc.num_experts
+    assert e % ep_size == 0, (e, ep_size)
+    e_loc = e // ep_size
+    cap = _capacity(t, mc)
+
+    gates, idx, aux = router_probs(params, x, mc)  # (T,k), (T,k)
+
+    # --- dispatch table: for each expert, up to `cap` (token, gate) slots ---
+    flat_e = idx.reshape(-1)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), mc.top_k)
+    flat_g = gates.reshape(-1)
+    # stable sort by expert id groups tokens per expert
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position within expert group = running index - group start
+    grp_start = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+    pos = jnp.arange(t * mc.top_k) - grp_start[se]
+    keep = pos < cap
+    drop_frac = 1.0 - keep.mean()
+    # scatter into (E, C+1) tables; column `cap` is a trash slot so dropped
+    # tokens never collide with a kept token's slot; sentinel row index = t
+    table_t = jnp.full((e, cap + 1), t, jnp.int32)
+    table_g = jnp.zeros((e, cap + 1), jnp.float32)
+    pos_c = jnp.minimum(pos, cap)
+    table_t = table_t.at[se, pos_c].set(jnp.where(keep, st, t))
+    table_g = table_g.at[se, pos_c].set(jnp.where(keep, sg, 0.0))
+    table_t = table_t[:, :cap]
+    table_g = table_g[:, :cap]
+
+    # --- this device's expert slice ---
+    if ep_size > 1:
+        offset = (jnp.asarray(ep_index) * e_loc).astype(jnp.int32)
+        tt = jax.lax.dynamic_slice_in_dim(table_t, offset, e_loc, 0)
+        tg = jax.lax.dynamic_slice_in_dim(table_g, offset, e_loc, 0)
+        we_g = params["experts"]["w_gate"]  # already (E_loc, D, F) under shard_map
+        we_u = params["experts"]["w_up"]
+        we_d = params["experts"]["w_down"]
+    else:
+        tt, tg = table_t, table_g
+        we_g = params["experts"]["w_gate"]
+        we_u = params["experts"]["w_up"]
+        we_d = params["experts"]["w_down"]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)  # sentinel row
+    xe = x_pad[tt]  # (E_loc, C, D)
+
+    # expert FFN (grouped einsum over the expert axis)
+    gate_act = jnp.einsum("ecd,edf->ecf", xe, we_g.astype(xe.dtype))
+    if cfg.mlp_variant == "swiglu":
+        up = jnp.einsum("ecd,edf->ecf", xe, we_u.astype(xe.dtype))
+        h = jax.nn.silu(gate_act.astype(jnp.float32)).astype(xe.dtype) * up
+    else:
+        h = jax.nn.gelu(gate_act.astype(jnp.float32)).astype(xe.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, we_d.astype(xe.dtype))  # (E_loc, C, D)
+
+    # combine: weighted scatter-add back to the token buffer
+    y = jnp.zeros((t + 1, d), jnp.float32)
+    y = y.at[tt].add(ye.astype(jnp.float32) * tg[..., None])
+    y = y[:t]
+    if axis_name is not None:
+        y = jax.lax.psum(y.astype(combine_dtype), axis_name).astype(jnp.float32)
+
+    if mc.num_shared_experts:
+        y = y + mlp(params["shared"], x, cfg.mlp_variant).astype(jnp.float32)
+
+    metrics = {"moe_aux": aux, "moe_drop_frac": drop_frac}
+    return y.astype(x.dtype), metrics
+
+
+def init_moe_or_dense(key, cfg: ArchConfig, layer_idx_in_pattern: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """MoE or dense MLP params depending on the MoE layout."""
+    if cfg.moe is not None and not (
+            cfg.moe.layout == "alternate" and layer_idx_in_pattern % 2 == 1):
+        return {"kind_moe": init_moe(key, cfg, dtype)}
+    return {"kind_dense": init_mlp(key, cfg.d_model, cfg.d_ff, cfg.mlp_variant, dtype)}

@@ -1,0 +1,12 @@
+"""Hybrid data quantization (paper §2.3, Table 1) + LM reuse policies."""
+
+from repro.quant.fixed_point import (  # noqa: F401
+    FixedPointFormat,
+    Q9_7,
+    Q11_21,
+    INT8,
+    INT16,
+    quantize,
+    dequantize,
+    quantize_roundtrip,
+)

@@ -1,0 +1,81 @@
+"""Bit-exact Qm.n fixed-point emulation.
+
+Paper Table 1:
+
+    data                      total  int  frac
+    (x_k, y_k)                16     9    7      -> Q9.7
+    {x_k(Z0), y_k(Z0)}        16     9    7      -> Q9.7
+    {x_k(Zi), y_k(Zi)}        8      8    0      -> int8 (pixel index)
+    H_Z0                      32     11   21     -> Q11.21
+    phi                       32     11   21     -> Q11.21
+    DSI scores                16     16   0      -> int16
+
+Emulation contract: operands are quantized (stored-integer semantics,
+round-half-away-from-zero, saturating), arithmetic runs in float32.
+FPGA DSP48 MACs carry 48-bit accumulators, so with quantized operands the
+hardware MAC is exact; float32's 24-bit mantissa introduces ≤2^-24
+relative error — three orders of magnitude below the Q9.7 LSB (2^-7),
+so operand/output quantization dominates exactly as on the device.
+A hypothesis property test cross-checks `quantize` against a pure-Python
+integer model.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class FixedPointFormat(NamedTuple):
+    total_bits: int
+    frac_bits: int
+    signed: bool = True
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def q_min(self) -> int:
+        return -(2 ** (self.total_bits - 1)) if self.signed else 0
+
+    @property
+    def q_max(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1 if self.signed else 2 ** self.total_bits - 1
+
+    @property
+    def lsb(self) -> float:
+        return 1.0 / self.scale
+
+
+Q9_7 = FixedPointFormat(16, 7)  # event coords & canonical coords
+Q11_21 = FixedPointFormat(32, 21)  # H_Z0 and phi
+INT8 = FixedPointFormat(8, 0, signed=False)  # plane coords (pixel index 0..255)
+INT16 = FixedPointFormat(16, 0)  # DSI scores
+
+
+def _round_half_away(x: Array) -> Array:
+    """RTL-style rounding: round half away from zero (jnp.round is half-even)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def quantize(x: Array, fmt: FixedPointFormat) -> Array:
+    """float -> stored integer (int32 carrier), saturating."""
+    q = _round_half_away(x.astype(jnp.float32) * fmt.scale)
+    return jnp.clip(q, fmt.q_min, fmt.q_max).astype(jnp.int32)
+
+
+def dequantize(q: Array, fmt: FixedPointFormat) -> Array:
+    return q.astype(jnp.float32) / fmt.scale
+
+
+def quantize_roundtrip(x: Array, fmt: FixedPointFormat) -> Array:
+    """float -> quantized float (the value the hardware would see)."""
+    return dequantize(quantize(x, fmt), fmt)
+
+
+def storage_bytes(n_elems: int, fmt: FixedPointFormat) -> int:
+    return n_elems * fmt.total_bits // 8

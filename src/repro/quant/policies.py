@@ -1,0 +1,93 @@
+"""Quantization policies: the paper's Table 1 for EMVS, + LM policies."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import CameraModel
+from repro.core.geometry import PlaneSweepCoeffs
+from repro.quant.fixed_point import (
+    FixedPointFormat,
+    INT8,
+    INT16,
+    Q9_7,
+    Q11_21,
+    quantize_roundtrip,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EMVSQuantPolicy:
+    """Hybrid quantization strategy of paper Table 1."""
+
+    coords: FixedPointFormat = Q9_7  # (x_k, y_k)
+    canonical: FixedPointFormat = Q9_7  # {x_k(Z0), y_k(Z0)}
+    plane_coords: FixedPointFormat = INT8  # {x_k(Zi), y_k(Zi)}
+    homography: FixedPointFormat = Q11_21  # H_Z0
+    phi: FixedPointFormat = Q11_21
+    dsi: FixedPointFormat = INT16
+
+    def quantize_events(self, xy: Array) -> Array:
+        return quantize_roundtrip(xy, self.coords)
+
+    def quantize_canonical(self, xy0: Array) -> Array:
+        return quantize_roundtrip(xy0, self.canonical)
+
+    def quantize_homography(self, H: Array) -> Array:
+        return quantize_roundtrip(H, self.homography)
+
+    def quantize_phi(self, phi: PlaneSweepCoeffs) -> PlaneSweepCoeffs:
+        return PlaneSweepCoeffs(
+            alpha=quantize_roundtrip(phi.alpha, self.phi),
+            beta_x=quantize_roundtrip(phi.beta_x, self.phi),
+            beta_y=quantize_roundtrip(phi.beta_y, self.phi),
+        )
+
+    def quantize_plane_coords(self, x_i: Array, y_i: Array) -> tuple[Array, Array]:
+        """Nearest-voxel rounding to 8-bit pixel index.
+
+        Out-of-range coords are parked at the format max so the voting
+        bounds check ('projection missing judgement') drops them for any
+        sensor narrower than 256 px (DAVIS240: 240x180). Plain saturation
+        would alias negative coords to pixel 0 — a *valid* pixel — and
+        fabricate votes; the park-at-max rule mirrors the FPGA's Nearest
+        Voxel Finder doing the miss-judgement before address generation.
+        """
+        fmt = self.plane_coords
+        park = jnp.float32(fmt.q_max)
+
+        def q(c: Array) -> Array:
+            out_of_range = (c < -0.5) | (c > fmt.q_max + 0.5)
+            return jnp.where(out_of_range, park, quantize_roundtrip(c, fmt))
+
+        return q(x_i), q(y_i)
+
+
+TABLE1 = EMVSQuantPolicy()
+
+
+def memory_report(cam: CameraModel, num_planes: int, events_per_frame: int = 1024
+                  ) -> dict[str, dict[str, int]]:
+    """Paper §2.3: 'saves up to 50% of memory and bandwidth'. Bytes per frame."""
+    n_dsi = cam.width * cam.height * num_planes
+    fp32 = {
+        "events": events_per_frame * 2 * 4,
+        "canonical": events_per_frame * 2 * 4,
+        "plane_coords": events_per_frame * 2 * 4,  # per plane, streamed
+        "H": 9 * 4,
+        "phi": 3 * 128 * 4,
+        "dsi": n_dsi * 4,
+    }
+    q = {
+        "events": events_per_frame * 2 * 2,  # Q9.7 pairs packed to 32b
+        "canonical": events_per_frame * 2 * 2,
+        "plane_coords": events_per_frame * 2 * 1,  # int8
+        "H": 9 * 4,  # Q11.21 stays 32b
+        "phi": 3 * 128 * 4,
+        "dsi": n_dsi * 2,  # int16
+    }
+    return {"float32": fp32, "table1": q}

@@ -1,0 +1,29 @@
+"""TrainState checkpointing on top of distributed.fault_tolerance.
+
+Logical (mesh-independent) checkpoints: save full arrays + manifest;
+restore with the *current* mesh's shardings — the elastic-restart path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.distributed import fault_tolerance as ft
+from repro.training.train_step import TrainState
+
+
+def save(ckpt_dir: str, step: int, state: TrainState, *, keep_last: int = 3,
+         extra: dict | None = None) -> str:
+    return ft.save_checkpoint(ckpt_dir, step, state._asdict(),
+                              extra=extra, keep_last=keep_last)
+
+
+def restore(ckpt_dir: str, step: int, like: TrainState,
+            shardings: Any = None) -> TrainState:
+    d = ft.restore_checkpoint(
+        ckpt_dir, step, like._asdict(),
+        shardings._asdict() if shardings is not None else None)
+    return TrainState(**d)
+
+
+def latest(ckpt_dir: str) -> int | None:
+    return ft.latest_step(ckpt_dir)

@@ -1,0 +1,107 @@
+"""AdamW + cosine schedule, from scratch (no optax dependency).
+
+Low-bit optimizer state is a first-class option (`state_dtype`):
+m/v stored in bf16 halves optimizer memory — the paper's
+hybrid-quantization principle (Table 1: keep precision where it matters,
+shorten it where it does not) applied to the largest memory consumer of
+large-scale training. For the 1T-param config this is the difference
+between fitting and not fitting a 512-chip v5e pod pair (see
+EXPERIMENTS.md §Dry-run).
+
+The update math always runs in fp32; only the *stored* state is cast.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32  # bf16 halves optimizer memory
+
+
+class OptState(NamedTuple):
+    step: Array  # () int32
+    m: Any  # pytree like params
+    v: Any
+
+
+def cosine_lr(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_frac * peak."""
+    s = step.astype(jnp.float32)
+    warm = cfg.peak_lr * s / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _is_matrix(p: Array) -> bool:
+    """Weight decay applies to matrices only (norms/biases/scalars exempt)."""
+    return p.ndim >= 2
+
+
+def adamw_update(params: Any, grads: Any, state: OptState, cfg: AdamWConfig
+                 ) -> tuple[Any, OptState, dict]:
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return (newp.astype(p.dtype), m32.astype(cfg.state_dtype),
+                v32.astype(cfg.state_dtype))
+
+    # flatten explicitly: the params tree itself contains tuples, so a
+    # tuple-is_leaf unzip would mistake structure for leaves
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state.m)
+    v_leaves = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    newp = jax.tree.unflatten(treedef, [o[0] for o in out])
+    newm = jax.tree.unflatten(treedef, [o[1] for o in out])
+    newv = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return newp, OptState(step=step, m=newm, v=newv), {
+        "lr": lr, "grad_norm": gnorm}

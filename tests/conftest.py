@@ -1,0 +1,50 @@
+"""Shared fixtures. Tests run on ONE (real) device — the 512-device flag
+lives only in launch/dryrun.py; distributed tests spawn subprocesses."""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def cam():
+    from repro.core.camera import CameraModel
+
+    return CameraModel()
+
+
+@pytest.fixture(scope="session")
+def small_scene(cam):
+    """Small 3-planes scene + trajectory + event frames (shared, ~seconds)."""
+    from repro.events.aggregation import aggregate
+    from repro.events.simulator import (
+        SceneConfig,
+        make_scene,
+        make_trajectory,
+        simulate_events,
+    )
+
+    scene = make_scene(SceneConfig(name="simulation_3planes", points_per_plane=150))
+    traj = make_trajectory("simulation_3planes", 24)
+    ev = simulate_events(cam, scene, traj, noise_fraction=0.0)
+    frames = aggregate(cam, ev, traj, events_per_frame=1024)
+    return {"scene": scene, "traj": traj, "events": ev, "frames": frames}
+
+
+def rng(seed: int = 0) -> np.random.Generator:
+    return np.random.default_rng(seed)

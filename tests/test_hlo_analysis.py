@@ -1,0 +1,97 @@
+"""HLO analyzer: trip-count-aware flops/collectives (the roofline's data
+source) validated on known-flops programs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_text, parse_module, multiplicities
+
+
+def test_plain_matmul_flops_exact():
+    f = jax.jit(lambda a, b: a @ b)
+    c = f.lower(jax.ShapeDtypeStruct((256, 512), jnp.float32),
+                jax.ShapeDtypeStruct((512, 128), jnp.float32)).compile()
+    st = analyze_text(c.as_text())
+    assert st.flops == 2 * 256 * 512 * 128
+
+
+def test_scanned_matmul_flops_count_trips():
+    def body(cr, w):
+        return jnp.tanh(cr @ w), None
+
+    f = jax.jit(lambda cr, ws: jax.lax.scan(body, cr, ws)[0])
+    c = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                jax.ShapeDtypeStruct((9, 64, 64), jnp.float32)).compile()
+    st = analyze_text(c.as_text())
+    assert st.flops == 9 * 2 * 64 ** 3
+    assert 9 in st.trip_counts
+
+
+def test_grad_of_scan_counts_both_passes():
+    def body(cr, w):
+        return jnp.tanh(cr @ w), None
+
+    f = jax.jit(jax.grad(lambda cr, ws: jax.lax.scan(body, cr, ws)[0].sum()))
+    c = f.lower(jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)).compile()
+    st = analyze_text(c.as_text())
+    assert st.flops == 2 * 5 * 2 * 32 ** 3  # fwd + bwd-dx matmuls
+
+
+def test_nested_scan_multiplicity():
+    def inner(c, w):
+        return c @ w, None
+
+    def outer(c, ws):
+        return jax.lax.scan(inner, c, ws)[0], None
+
+    f = jax.jit(lambda c, wss: jax.lax.scan(outer, c, wss)[0])
+    c = f.lower(jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                jax.ShapeDtypeStruct((3, 4, 16, 16), jnp.float32)).compile()
+    st = analyze_text(c.as_text())
+    assert st.flops == 3 * 4 * 2 * 16 ** 3
+
+
+def test_parser_handles_tuple_signatures():
+    txt = """
+HloModule test
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(11)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4] get-tuple-element(%p), index=1
+  %ar = f32[4] all-reduce(%x), to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4]) tuple(%ip, %ar)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4]) tuple(%z, %a)
+  %w = (s32[], f32[4]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    st = analyze_text(txt)
+    assert st.collective_counts["all-reduce"] == 11
+    assert st.collective_bytes == 11 * 16
+
+
+def test_multiplicities_entry_is_one():
+    f = jax.jit(lambda a: a * 2)
+    c = f.lower(jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+    comps = parse_module(c.as_text())
+    mult = multiplicities(comps)
+    entry = [n for n, c_ in comps.items() if c_.is_entry]
+    assert mult[entry[0]] == 1.0

@@ -1,0 +1,87 @@
+"""MoE routing/capacity semantics (single device; EP in test_distributed)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.moe import _capacity, init_moe, moe_apply, router_probs
+
+
+def _cfg(capacity_factor=1.25, top_k=2):
+    cfg = get_config("deepseek-moe-16b").reduced()
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=capacity_factor,
+                                     top_k=top_k))
+
+
+def test_router_gates_normalized():
+    cfg = _cfg()
+    params = init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    gates, idx, aux = router_probs(params, x, cfg.moe)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+    assert bool((idx >= 0).all()) and bool((idx < cfg.moe.num_experts).all())
+    # top-k ids are distinct per token
+    assert bool((idx[:, 0] != idx[:, 1]).all())
+    assert float(aux) > 0.0
+
+
+def test_no_drops_at_high_capacity():
+    cfg = _cfg(capacity_factor=16.0)
+    params = init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    _, metrics = moe_apply(params, x, cfg)
+    assert float(metrics["moe_drop_frac"]) == 0.0
+
+
+@given(t=st.sampled_from([16, 64, 256]), cf=st.sampled_from([0.5, 1.0, 2.0]))
+@settings(max_examples=9)
+def test_capacity_formula(t, cf):
+    cfg = _cfg(capacity_factor=cf)
+    c = _capacity(t, cfg.moe)
+    assert c >= 4
+    assert c >= int(t * cfg.moe.top_k * cf / cfg.moe.num_experts)
+
+
+def test_moe_output_is_gated_expert_mix():
+    """With capacity ample, y = sum_k gate_k * expert_k(x) + shared(x)."""
+    cfg = _cfg(capacity_factor=16.0)
+    params = init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, cfg.d_model))
+    y, _ = moe_apply(params, x, cfg)
+    gates, idx, _ = router_probs(params, x, cfg.moe)
+
+    from repro.models.layers import mlp
+
+    we = params["experts"]
+    want = np.zeros((8, cfg.d_model), np.float32)
+    for t in range(8):
+        acc = np.zeros(cfg.d_model, np.float32)
+        for j in range(cfg.moe.top_k):
+            e = int(idx[t, j])
+            h = np.asarray(x[t]) @ np.asarray(we["w_gate"][e], np.float32)
+            u = np.asarray(x[t]) @ np.asarray(we["w_up"][e], np.float32)
+            act = h / (1 + np.exp(-h)) * u  # silu * up
+            acc += float(gates[t, j]) * (act @ np.asarray(we["w_down"][e], np.float32))
+        want[t] = acc
+    if cfg.moe.num_shared_experts:
+        want += np.asarray(mlp(params["shared"], x, cfg.mlp_variant))
+    np.testing.assert_allclose(np.asarray(y), want, atol=5e-4, rtol=1e-3)
+
+
+def test_drop_frac_increases_as_capacity_shrinks():
+    params = init_moe(jax.random.PRNGKey(0), _cfg().reduced() if False else _cfg(),
+                      dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, _cfg().d_model))
+    drops = []
+    for cf in (4.0, 1.0, 0.25):
+        cfg = _cfg(capacity_factor=cf)
+        _, m = moe_apply(params, x, cfg)
+        drops.append(float(m["moe_drop_frac"]))
+    assert drops[0] <= drops[1] <= drops[2]
+    assert drops[2] > 0.0

@@ -1,0 +1,90 @@
+"""Fixed-point quantization: bit-exactness vs a pure-Python integer model
+(hypothesis), roundtrip bounds, saturation, and the Table-1 policy."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.quant.fixed_point import (
+    INT8,
+    INT16,
+    Q9_7,
+    Q11_21,
+    FixedPointFormat,
+    dequantize,
+    quantize,
+    quantize_roundtrip,
+    storage_bytes,
+)
+from repro.quant.policies import TABLE1, memory_report
+
+FORMATS = [Q9_7, Q11_21, INT8, INT16]
+
+
+def python_int_model(x: float, fmt: FixedPointFormat) -> int:
+    """Reference: round-half-away-from-zero + saturate, in exact Python."""
+    scaled = x * (2 ** fmt.frac_bits)
+    q = math.floor(abs(scaled) + 0.5)
+    q = int(math.copysign(q, scaled))
+    return max(fmt.q_min, min(fmt.q_max, q))
+
+
+@given(
+    x=st.floats(min_value=-4096, max_value=4096, allow_nan=False,
+                width=32),
+    fmt_ix=st.integers(0, len(FORMATS) - 1),
+)
+def test_quantize_matches_python_int_model(x, fmt_ix):
+    fmt = FORMATS[fmt_ix]
+    got = int(quantize(jnp.float32(x), fmt))
+    want = python_int_model(np.float32(x), fmt)
+    # fp32 scaling can land exactly on .5 boundaries differently than exact
+    # arithmetic for huge Q11.21 values; allow 1 ulp there only
+    assert abs(got - want) <= (1 if fmt.frac_bits >= 21 else 0), (x, fmt)
+
+
+@given(x=st.floats(min_value=-255, max_value=255, allow_nan=False, width=32))
+def test_roundtrip_error_within_half_lsb(x):
+    for fmt in (Q9_7, Q11_21):
+        err = abs(float(quantize_roundtrip(jnp.float32(x), fmt)) - np.float32(x))
+        assert err <= fmt.lsb / 2 + 1e-6, (x, fmt)
+
+
+def test_saturation():
+    assert int(quantize(jnp.float32(1e9), Q9_7)) == Q9_7.q_max
+    assert int(quantize(jnp.float32(-1e9), Q9_7)) == Q9_7.q_min
+    assert int(quantize(jnp.float32(-5.0), INT8)) == 0  # unsigned floor
+    assert int(quantize(jnp.float32(300.0), INT8)) == INT8.q_max
+
+
+def test_formats_match_paper_table1():
+    assert Q9_7 == FixedPointFormat(16, 7)
+    assert Q11_21 == FixedPointFormat(32, 21)
+    assert INT8.total_bits == 8 and INT8.frac_bits == 0 and not INT8.signed
+    assert INT16.total_bits == 16 and INT16.frac_bits == 0
+    assert storage_bytes(1024 * 2, Q9_7) == 4096  # 16-bit pairs -> 32b words
+
+
+def test_plane_coord_park_at_max():
+    """Out-of-range plane coords must park at q_max (a miss), never alias
+    to pixel 0 (a fabricated vote)."""
+    x = jnp.array([-3.0, -0.6, 0.0, 120.4, 255.0, 300.0], jnp.float32)
+    qx, qy = TABLE1.quantize_plane_coords(x, x)
+    assert float(qx[0]) == INT8.q_max  # negative -> park
+    assert float(qx[1]) == INT8.q_max
+    assert float(qx[2]) == 0.0
+    assert float(qx[3]) == 120.0
+    assert float(qx[4]) == 255.0
+    assert float(qx[5]) == INT8.q_max
+
+
+def test_memory_report_50pct_claim(cam):
+    """Paper §2.3: hybrid quantization saves ~50% of memory/bandwidth."""
+    rep = memory_report(cam, num_planes=128)
+    fp32 = sum(rep["float32"].values())
+    q = sum(rep["table1"].values())
+    assert q <= 0.55 * fp32, (q, fp32)  # dominated by int16 DSI: ~2x saving

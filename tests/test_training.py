@@ -1,0 +1,164 @@
+"""Training substrate: optimizer math, schedules, microbatching,
+checkpoint/restart, preemption, stragglers, elastic re-meshing."""
+from __future__ import annotations
+
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.distributed import fault_tolerance as ft
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    cosine_lr,
+    global_norm,
+    init_opt_state,
+)
+from repro.training.train_step import TrainOptions, init_train_state, make_train_step
+
+
+def test_adamw_matches_reference_step():
+    """One AdamW step vs a literal numpy transcription."""
+    cfg = AdamWConfig(peak_lr=1e-2, warmup_steps=0, total_steps=100,
+                      weight_decay=0.1, grad_clip=1e9)
+    p = {"w": jnp.asarray(np.arange(6, dtype=np.float32).reshape(2, 3))}
+    g = {"w": jnp.full((2, 3), 0.5, jnp.float32)}
+    st_ = init_opt_state(p, cfg)
+    newp, newst, m = adamw_update(p, g, st_, cfg)
+    lr = float(cosine_lr(cfg, jnp.int32(1)))
+    m1 = 0.1 * 0.5 / (1 - 0.9)
+    v1 = 0.05 * 0.25 / (1 - 0.95)
+    want = np.asarray(p["w"]) - lr * (m1 / (np.sqrt(v1) + cfg.eps)
+                                      + 0.1 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-5)
+    assert int(newst.step) == 1
+
+
+def test_weight_decay_skips_vectors():
+    cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=0, total_steps=10,
+                      weight_decay=1.0)
+    p = {"w": jnp.ones((2, 2)), "scale": jnp.ones((4,))}
+    g = {"w": jnp.zeros((2, 2)), "scale": jnp.zeros((4,))}
+    newp, _, _ = adamw_update(p, g, init_opt_state(p, cfg), cfg)
+    assert float(jnp.max(jnp.abs(newp["scale"] - 1.0))) == 0.0  # no decay
+    assert float(jnp.max(jnp.abs(newp["w"] - 1.0))) > 0.0  # decayed
+
+
+@given(step=st.integers(0, 10_000))
+@settings(max_examples=20)
+def test_cosine_schedule_bounds(step):
+    cfg = AdamWConfig(peak_lr=3e-4, warmup_steps=100, total_steps=10_000)
+    lr = float(cosine_lr(cfg, jnp.int32(step)))
+    assert 0.0 <= lr <= cfg.peak_lr * (1 + 1e-6)
+    if step >= cfg.total_steps:
+        assert lr == pytest.approx(cfg.peak_lr * cfg.min_lr_frac, rel=1e-3)
+
+
+def test_grad_clip_caps_update_norm():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=0, total_steps=10,
+                      grad_clip=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros((4, 4))}
+    g = {"w": jnp.full((4, 4), 100.0)}
+    _, stt, m = adamw_update(p, g, init_opt_state(p, cfg), cfg)
+    assert float(m["grad_norm"]) == pytest.approx(400.0)
+    # effective m is the clipped gradient
+    assert float(jnp.max(jnp.abs(stt.m["w"]))) <= 0.1 * (100.0 / 400.0) * 1.01
+
+
+def test_loss_decreases_and_microbatch_equivalence():
+    cfg = get_config("stablelm-3b").reduced()
+    opt = AdamWConfig(warmup_steps=2, total_steps=20)
+    o1 = TrainOptions(microbatches=1, remat=False, opt=opt)
+    o2 = TrainOptions(microbatches=2, remat=True, opt=opt)
+    s1 = init_train_state(jax.random.PRNGKey(0), cfg, o1)
+    s2 = jax.tree.map(lambda x: x, s1)
+    f1 = jax.jit(make_train_step(cfg, o1))
+    f2 = jax.jit(make_train_step(cfg, o2))
+    ds = TokenStream(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=8))
+    losses = []
+    for i in range(6):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        s1, m1 = f1(s1, b)
+        s2, m2 = f2(s2, b)
+        losses.append(float(m1["loss"]))
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-2)
+    assert losses[-1] < losses[0]
+
+
+def test_data_stream_deterministic_and_shifted():
+    ds = TokenStream(DataConfig(vocab_size=97, seq_len=16, global_batch=4,
+                                seed=3))
+    a, b = ds.batch(7), ds.batch(7)
+    assert (a["tokens"] == b["tokens"]).all()
+    assert (a["targets"][:, :-1] == a["tokens"][:, 1:]).all()
+    assert not (ds.batch(8)["tokens"] == a["tokens"]).all()
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    cfg = get_config("qwen3-8b").reduced()
+    opts = TrainOptions()
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opts)
+    ckpt.save(str(tmp_path), 5, state)
+    ckpt.save(str(tmp_path), 10, state)
+    assert ckpt.latest(str(tmp_path)) == 10
+    like = jax.eval_shape(lambda: state)
+    restored = ckpt.restore(str(tmp_path), 10, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype, (a.dtype, b.dtype)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_rolling_cleanup(tmp_path):
+    tree = {"x": jnp.arange(4.0)}
+    for s in (1, 2, 3, 4, 5):
+        ft.save_checkpoint(str(tmp_path), s, tree, keep_last=2)
+    assert ft.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_preemption_handler():
+    h = ft.PreemptionHandler(signals=(signal.SIGUSR1,))
+    assert not h.should_drain
+    os.kill(os.getpid(), signal.SIGUSR1)
+    assert h.should_drain
+    h.restore()
+
+
+def test_straggler_monitor():
+    mon = ft.StragglerMonitor(window=16, factor=2.0, patience=2)
+    for _ in range(10):
+        assert mon.observe(1.0) is None
+    assert mon.observe(5.0) == "warn"
+    assert mon.observe(5.0) == "drain"
+    assert mon.observe(1.0) is None  # streak reset
+
+
+def test_elastic_mesh_shapes():
+    axes, used = ft.elastic_mesh_shape(512, model=16, pod_size=256)
+    assert axes == {"pod": 2, "data": 16, "model": 16} and used == 512
+    # lose 64 chips: one pod shrinks -> re-mesh into fewer data rows
+    axes, used = ft.elastic_mesh_shape(448, model=16, pod_size=256)
+    assert used <= 448 and axes["model"] == 16
+    axes, used = ft.elastic_mesh_shape(240, model=16, pod_size=256)
+    assert axes == {"data": 15, "model": 16} and used == 240
+    with pytest.raises(ValueError):
+        ft.elastic_mesh_shape(8, model=16)
+
+
+def test_elastic_restart_plan(tmp_path):
+    tree = {"x": jnp.arange(4.0)}
+    ft.save_checkpoint(str(tmp_path), 123, tree)
+    plan = ft.plan_elastic_restart(str(tmp_path), old_devices=512,
+                                   surviving=448, model=16)
+    assert plan.resume_step == 123
+    assert plan.new_devices <= 448
+    assert "re-mesh" in plan.describe()

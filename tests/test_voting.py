@@ -1,0 +1,91 @@
+"""Voting formulations must agree: scatter (FPGA semantics) vs one-hot
+matmul (TPU semantics) vs the Pallas kernel — for nearest AND bilinear,
+including out-of-bounds, NaN/Inf coords, and masked events."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.voting import vote_onehot_matmul, vote_scatter
+
+W, H, NZ, E = 32, 24, 4, 64
+
+
+def _coords(rng, spread=1.4):
+    """Coords spilling beyond bounds on purpose."""
+    x = rng.uniform(-0.2 * W, spread * W, (NZ, E)).astype(np.float32)
+    y = rng.uniform(-0.2 * H, spread * H, (NZ, E)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("mode", ["nearest", "bilinear"])
+def test_scatter_equals_matmul(mode):
+    rng = np.random.default_rng(0)
+    x, y = _coords(rng)
+    dsi0 = jnp.zeros((NZ, H, W), jnp.float32)
+    a = vote_scatter(dsi0, x, y, w=W, h=H, mode=mode)
+    b = vote_onehot_matmul(dsi0, x, y, w=W, h=H, mode=mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=15)
+def test_scatter_equals_matmul_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    x, y = _coords(rng, spread=2.0)
+    dsi0 = jnp.zeros((NZ, H, W), jnp.float32)
+    for mode in ("nearest", "bilinear"):
+        a = vote_scatter(dsi0, x, y, w=W, h=H, mode=mode)
+        b = vote_onehot_matmul(dsi0, x, y, w=W, h=H, mode=mode)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_nonfinite_coords_never_vote():
+    x = jnp.array([[jnp.nan, jnp.inf, -jnp.inf, 5.0]], jnp.float32)
+    y = jnp.array([[2.0, 2.0, 2.0, jnp.nan]], jnp.float32)
+    dsi0 = jnp.zeros((1, H, W), jnp.float32)
+    for mode in ("nearest", "bilinear"):
+        for f in (vote_scatter, vote_onehot_matmul):
+            out = f(dsi0, x, y, w=W, h=H, mode=mode)
+            assert float(jnp.sum(out)) == 0.0, (mode, f.__name__)
+            assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_weights_mask_events():
+    rng = np.random.default_rng(3)
+    x, y = _coords(rng, spread=0.8)
+    wts = jnp.asarray((rng.random((NZ, E)) > 0.5).astype(np.float32))
+    dsi0 = jnp.zeros((NZ, H, W), jnp.float32)
+    a = vote_scatter(dsi0, x, y, w=W, h=H, mode="nearest", weights=wts)
+    b = vote_onehot_matmul(dsi0, x, y, w=W, h=H, mode="nearest", weights=wts)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    # total votes == number of in-bounds, unmasked events
+    xr, yr = jnp.round(x), jnp.round(y)
+    inb = (xr >= 0) & (xr <= W - 1) & (yr >= 0) & (yr <= H - 1)
+    assert float(jnp.sum(a)) == float(jnp.sum(wts * inb))
+
+
+def test_bilinear_votes_sum_to_one_per_event():
+    """Bilinear contributions of one in-bounds event must total 1."""
+    x = jnp.array([[10.3]], jnp.float32)
+    y = jnp.array([[7.8]], jnp.float32)
+    dsi0 = jnp.zeros((1, H, W), jnp.float32)
+    out = vote_onehot_matmul(dsi0, x, y, w=W, h=H, mode="bilinear")
+    assert abs(float(jnp.sum(out)) - 1.0) < 1e-5
+    # exactly 4 voxels touched
+    assert int(jnp.sum(out > 0)) == 4
+
+
+def test_int16_dsi_accumulation_and_saturation():
+    from repro.core import dsi as dsi_lib
+
+    acc = jnp.full((1, 2, 2), 40000, dsi_lib.DSI_ACCUM_DTYPE)
+    stored = dsi_lib.to_storage(acc)
+    assert stored.dtype == jnp.int16
+    assert int(stored[0, 0, 0]) == 32767  # saturating store
+    assert float(dsi_lib.saturation_fraction(acc)) == 1.0
+    ok = jnp.full((1, 2, 2), 1000, dsi_lib.DSI_ACCUM_DTYPE)
+    assert float(dsi_lib.saturation_fraction(ok)) == 0.0
