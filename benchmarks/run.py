@@ -21,11 +21,13 @@ def main() -> int:
         fig7a_accuracy,
         memory_footprint,
         roofline_report,
+        segment_batching,
         table3_runtime,
     )
 
     sections = [
         ("Table 3 (runtime per event frame)", table3_runtime.main),
+        ("Segment batching (looped vs batched sweep)", segment_batching.main),
         ("Fig 4a (nearest vs bilinear voting)", fig4a_voting.main),
         ("Fig 4b (hybrid quantization)", fig4b_quant.main),
         ("Fig 7a (original vs reformulated)", fig7a_accuracy.main),

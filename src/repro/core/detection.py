@@ -89,6 +89,26 @@ def detect_structure(
     return DepthMap(depth=depth, mask=mask, confidence=conf)
 
 
+def detect_and_filter(
+    dsi: Array,
+    planes: Array,
+    *,
+    threshold_c: float = 6.0,
+    min_votes: float = 3.0,
+    median_filter: bool = True,
+) -> DepthMap:
+    """D (+ optional 3x3 median) for one DSI volume.
+
+    Single entry point used by both the per-segment and the batched
+    segment-sweep pipeline paths so the post-voting math cannot drift
+    between them.
+    """
+    dm = detect_structure(dsi, planes, threshold_c=threshold_c, min_votes=min_votes)
+    if median_filter:
+        dm = DepthMap(median_filter3(dm.depth, dm.mask), dm.mask, dm.confidence)
+    return dm
+
+
 def median_filter3(depth: Array, mask: Array) -> Array:
     """3x3 median over valid neighbours (cheap shift-stack formulation)."""
     shifts = []

@@ -62,6 +62,18 @@ def from_storage(dsi: Array) -> Array:
     return dsi.astype(DSI_ACCUM_DTYPE)
 
 
+def storage_roundtrip(dsi: Array) -> Array:
+    """Apply int16 store semantics to an accumulator DSI (any leading dims).
+
+    Voting accumulates in int32 (or float32 for bilinear); the device
+    checkpoints DSI scores as int16 (Table 1). This clips exactly like the
+    RTL store path and returns the accumulator dtype, so downstream
+    detection sees the quantized scores. Elementwise, hence safe for both
+    a single (Nz, h, w) volume and a batched (S, Nz, h, w) sweep.
+    """
+    return from_storage(to_storage(dsi))
+
+
 def saturation_fraction(dsi: Array) -> Array:
     """Fraction of voxels that would clip at int16 — paper's 16b adequacy claim."""
     info = jnp.iinfo(DSI_STORE_DTYPE)

@@ -3,19 +3,33 @@
 Key structural choice (mirrors the algorithm, DESIGN.md §2): key-frame
 segmentation depends ONLY on the trajectory, not on event content, so the
 segment boundaries are computed up front on the host (the ARM side in the
-paper). Each key-frame segment is then processed by a single jit'd
-`lax.scan` over its event frames — votes accumulate into a fresh DSI —
-followed by detection and map merge. This is exactly the paper's
-"reset DSI on key frame" semantics with a fully-compiled hot loop.
+paper). Segments are then padded to a small set of fixed frame capacities
+(multiple-of-four buckets) and processed by ONE jit'd device program per
+bucket: a `lax.map` over segments whose body votes the segment's DSI
+(scan over event frames, or the fused Pallas kernel), applies the int16
+store semantics, runs detection and the median filter. Padded frames
+repeat a real frame (finite geometry) and carry a validity weight of 0,
+so they vote exactly nothing — the padded sweep matches the per-segment
+path bitwise on the integer/nearest datapaths and to float tolerance on
+the bilinear ones (tests enforce exactly that split).
+
+This replaces the seed's host-side Python loop, which re-traced
+`process_segment` for every distinct segment length and round-tripped
+host<->device per segment — the "many small dispatches" pathology that
+kills event-rate throughput. The looped path survives as
+`run_emvs_looped` (a thin loop over `process_segment`, itself a
+single-segment call into the batched sweep) for A/B benchmarking.
 
 The voting hot loop supports three interchangeable formulations
 (scatter / one-hot matmul / Pallas kernel) and the float vs Table-1
-quantized datapaths; all are pairwise-validated by tests.
+quantized datapaths; all are pairwise-validated by tests, batched and
+looped alike.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from functools import partial
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,15 +38,19 @@ import numpy as np
 from repro.core import dsi as dsi_lib
 from repro.core.backproject import FrameGeometry, frame_geometry
 from repro.core.camera import CameraModel
-from repro.core.detection import DepthMap, detect_structure, median_filter3
+from repro.core.detection import DepthMap, detect_and_filter
 from repro.core.dsi import DSIConfig
 from repro.core.geometry import SE3, PlaneSweepCoeffs, apply_homography, propagate_to_planes
-from repro.core.pointcloud import PointCloud, depth_map_to_points
+from repro.core.pointcloud import PointCloud, depth_map_to_points, depth_maps_to_points
 from repro.core.voting import vote_onehot_matmul, vote_scatter
 from repro.events.aggregation import EventFrames
 from repro.quant.policies import TABLE1, EMVSQuantPolicy
 
 Array = jax.Array
+
+# Smallest fixed segment capacity: keeping a floor bounds the number of
+# distinct compiled bucket shapes for trajectories with many tiny segments.
+SEGMENT_BUCKET_MIN = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +77,22 @@ class EMVSResult(NamedTuple):
     clouds: list[PointCloud]
 
 
+class SegmentBatch(NamedTuple):
+    """A bucket of key-frame segments padded to one fixed frame capacity C.
+
+    Padded frame slots repeat the segment's last real frame so their
+    geometry stays finite; `frame_valid` zeroes their vote weight.
+    """
+
+    xy: Array  # (S, C, E, 2) rectified event coords
+    valid: Array  # (S, C, E) float32 per-event validity
+    frame_valid: Array  # (S, C) float32 1 for real frames, 0 for padding
+    poses_R: Array  # (S, C, 3, 3)
+    poses_t: Array  # (S, C, 3)
+    ref_R: Array  # (S, 3, 3) reference (key-frame) pose per segment
+    ref_t: Array  # (S, 3)
+
+
 # ---------------------------------------------------------------------------
 # Key-frame segmentation (host-side, pose-only)
 # ---------------------------------------------------------------------------
@@ -83,6 +117,69 @@ def segment_keyframes(poses: SE3, mean_depth: float, frac: float) -> list[tuple[
             ref = t[i]
     bounds.append((start, t.shape[0]))
     return bounds
+
+
+def plan_segments(frames: EventFrames, dsi_cfg: DSIConfig,
+                  opts: EMVSOptions) -> list[tuple[int, int]]:
+    """Key-frame segments that carry enough parallax for a meaningful DSI."""
+    mean_depth = 0.5 * (dsi_cfg.z_min + dsi_cfg.z_max)
+    segs = segment_keyframes(frames.poses, mean_depth, opts.keyframe_dist_frac)
+    return [(a, b) for a, b in segs if b - a >= 2]
+
+
+def bucket_capacity(num_frames: int, minimum: int = SEGMENT_BUCKET_MIN) -> int:
+    """Fixed per-bucket frame capacity: next multiple of `minimum`.
+
+    Multiples of four bound the padding waste at 3 frames per segment
+    (power-of-two buckets can waste ~50% of the vote work on long
+    segments) while still collapsing the distinct compiled shapes to a
+    handful per sequence.
+    """
+    if num_frames < 1:
+        raise ValueError(f"segment must have at least one frame, got {num_frames}")
+    return max(minimum, -(-num_frames // minimum) * minimum)
+
+
+def _host_frames(frames: EventFrames) -> EventFrames:
+    """One device-to-host transfer of the fields pad_segments gathers from."""
+    return EventFrames(
+        xy=np.asarray(frames.xy),
+        valid=np.asarray(frames.valid),
+        t_mid=frames.t_mid,
+        poses=SE3(np.asarray(frames.poses.R), np.asarray(frames.poses.t)),
+    )
+
+
+def pad_segments(frames: EventFrames, segs: Sequence[tuple[int, int]],
+                 capacity: int) -> SegmentBatch:
+    """Gather a list of same-bucket segments into one padded SegmentBatch."""
+    idx_rows, fv_rows = [], []
+    for start, end in segs:
+        n = end - start
+        if not 0 < n <= capacity:
+            raise ValueError(f"segment {(start, end)} does not fit capacity {capacity}")
+        idx_rows.append(np.minimum(np.arange(start, start + capacity), end - 1))
+        fv_rows.append((np.arange(capacity) < n).astype(np.float32))
+    # Gather on the host with numpy: this is one-off ARM-side data staging,
+    # and keeping it out of XLA avoids compiling a fleet of tiny gather
+    # programs per bucket shape. Callers looping over buckets should pass
+    # host-side frames (see _host_frames) so the device-to-host transfer
+    # happens once per sequence, not once per bucket.
+    idx = np.stack(idx_rows)  # (S, C) frame indices, clamped
+    ref = np.array([s for s, _ in segs], dtype=np.int32)
+    xy = np.asarray(frames.xy)
+    valid = np.asarray(frames.valid)
+    poses_R = np.asarray(frames.poses.R)
+    poses_t = np.asarray(frames.poses.t)
+    return SegmentBatch(
+        xy=jnp.asarray(xy[idx]),
+        valid=jnp.asarray(valid[idx].astype(np.float32)),
+        frame_valid=jnp.asarray(np.stack(fv_rows)),
+        poses_R=jnp.asarray(poses_R[idx]),
+        poses_t=jnp.asarray(poses_t[idx]),
+        ref_R=jnp.asarray(poses_R[ref]),
+        ref_t=jnp.asarray(poses_t[ref]),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -129,14 +226,16 @@ def vote_frame(
         return vote_onehot_matmul(dsi, x_i, y_i, w=w, h=h, mode=opts.voting,
                                   weights=weights)
     if opts.formulation == "kernel":
-        from repro.kernels.backproject_vote import ops as bpv_ops
-
-        raise ValueError("kernel formulation is driven via process_segment")
+        raise ValueError(
+            "formulation='kernel' fuses projection and voting per segment; "
+            "it is driven by process_segments_batched / process_segment, "
+            "not per frame"
+        )
     raise ValueError(f"unknown formulation {opts.formulation}")
 
 
 # ---------------------------------------------------------------------------
-# Segment processing (one key frame): scan over event frames
+# Segment processing: batched sweep (one compiled program per bucket)
 # ---------------------------------------------------------------------------
 
 
@@ -146,15 +245,89 @@ def _accum_dtype(opts: EMVSOptions) -> Any:
     return dsi_lib.DSI_ACCUM_DTYPE
 
 
-def precompute_segment_geometry(
-    cam: CameraModel, frames: EventFrames, T_w_ref: SE3, planes: Array, z0: Array
+def precompute_batch_geometry(
+    cam: CameraModel, poses_R: Array, poses_t: Array, T_w_ref: SE3,
+    planes: Array, z0: Array
 ) -> FrameGeometry:
-    """Vectorized H/phi for all frames of a segment (ARM-side work)."""
+    """Vectorized H/phi for a stack of frame poses (ARM-side work)."""
 
     def per_frame(R, t):
         return frame_geometry(cam, T_w_ref, SE3(R, t), z0, planes)
 
-    return jax.vmap(per_frame)(frames.poses.R, frames.poses.t)
+    return jax.vmap(per_frame)(poses_R, poses_t)
+
+
+def precompute_segment_geometry(
+    cam: CameraModel, frames: EventFrames, T_w_ref: SE3, planes: Array, z0: Array
+) -> FrameGeometry:
+    """Vectorized H/phi for all frames of a segment (ARM-side work)."""
+    return precompute_batch_geometry(cam, frames.poses.R, frames.poses.t,
+                                     T_w_ref, planes, z0)
+
+
+@partial(jax.jit, static_argnames=("cam", "dsi_cfg", "opts"))
+def process_segments_batched(
+    cam: CameraModel,
+    dsi_cfg: DSIConfig,
+    batch: SegmentBatch,
+    opts: EMVSOptions,
+) -> tuple[Array, DepthMap]:
+    """Vote, quantize-store, detect and filter a whole segment bucket.
+
+    One compiled sweep: `lax.map` over the segment axis, so within a
+    `run_emvs` call the trace happens once per bucket instead of once per
+    segment, and no intermediate leaves the device. (The jit cache is
+    keyed on the full batch shape — segment count S, capacity C, events E
+    — so distinct sequences can still retrace; a streaming caller should
+    pad S to stable sizes.) Returns stacked per-segment DSIs
+    (S, Nz, h, w) and a DepthMap with (S, h, w) fields.
+    """
+    planes = dsi_cfg.planes()
+    z0 = planes[dsi_cfg.num_planes // 2]
+
+    def one_segment(seg: SegmentBatch) -> tuple[Array, DepthMap]:
+        T_w_ref = SE3(seg.ref_R, seg.ref_t)
+        geoms = precompute_batch_geometry(cam, seg.poses_R, seg.poses_t,
+                                          T_w_ref, planes, z0)
+
+        if opts.formulation == "kernel":
+            from repro.kernels.backproject_vote import ops as bpv_ops
+
+            dsi = bpv_ops.backproject_vote_frames(
+                seg.xy, seg.valid, geoms.H,
+                jnp.stack([geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y],
+                          axis=-1),  # (C, Nz, 3)
+                cam=cam, dsi_cfg=dsi_cfg, mode=opts.voting,
+                quantized=opts.quantized, frame_valid=seg.frame_valid,
+            )
+        else:
+            dsi0 = jnp.zeros(dsi_cfg.shape, dtype=_accum_dtype(opts))
+
+            def body(dsi, frame):
+                xy, valid, fv, H, alpha, beta_x, beta_y = frame
+                geom = FrameGeometry(H, PlaneSweepCoeffs(alpha, beta_x, beta_y))
+                x_i, y_i = project_frame(cam, xy, geom, opts)
+                return vote_frame(dsi, x_i, y_i, valid * fv, cam, opts), None
+
+            dsi, _ = jax.lax.scan(
+                body,
+                dsi0,
+                (seg.xy, seg.valid, seg.frame_valid, geoms.H,
+                 geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y),
+            )
+
+        if opts.quantized:
+            dsi = dsi_lib.storage_roundtrip(dsi)  # int16 store semantics
+
+        dm = detect_and_filter(
+            dsi, planes,
+            threshold_c=opts.detection_threshold_c,
+            min_votes=opts.detection_min_votes,
+            median_filter=opts.median_filter,
+        )
+        return dsi, dm
+
+    return jax.lax.map(one_segment, batch)
 
 
 def process_segment(
@@ -164,47 +337,23 @@ def process_segment(
     T_w_ref: SE3,
     opts: EMVSOptions,
 ) -> tuple[Array, DepthMap]:
-    """Vote all frames of one key-frame segment into a fresh DSI; detect."""
-    planes = dsi_cfg.planes()
-    z0 = planes[dsi_cfg.num_planes // 2]
-    geoms = precompute_segment_geometry(cam, frames, T_w_ref, planes, z0)
+    """Vote all frames of one key-frame segment into a fresh DSI; detect.
 
-    if opts.formulation == "kernel":
-        from repro.kernels.backproject_vote import ops as bpv_ops
-
-        dsi = bpv_ops.backproject_vote_frames(
-            frames.xy, frames.valid, geoms.H,
-            jnp.stack([geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y],
-                      axis=-1),  # (F, Nz, 3)
-            cam=cam, dsi_cfg=dsi_cfg, mode=opts.voting, quantized=opts.quantized,
-        )
-    else:
-        dsi0 = jnp.zeros(dsi_cfg.shape, dtype=_accum_dtype(opts))
-
-        def body(dsi, frame):
-            xy, valid, H, alpha, beta_x, beta_y = frame
-            geom = FrameGeometry(H, PlaneSweepCoeffs(alpha, beta_x, beta_y))
-            x_i, y_i = project_frame(cam, xy, geom, opts)
-            return vote_frame(dsi, x_i, y_i, valid, cam, opts), None
-
-        dsi, _ = jax.lax.scan(
-            body,
-            dsi0,
-            (frames.xy, frames.valid, geoms.H,
-             geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y),
-        )
-
-    if opts.quantized:
-        dsi = dsi_lib.from_storage(dsi_lib.to_storage(dsi))  # int16 store semantics
-
-    dm = detect_structure(
-        dsi, planes,
-        threshold_c=opts.detection_threshold_c,
-        min_votes=opts.detection_min_votes,
+    Thin wrapper over the batched sweep with a single unpadded segment, so
+    per-segment and batched callers share one code path.
+    """
+    num_frames = frames.xy.shape[0]
+    batch = SegmentBatch(
+        xy=frames.xy[None],
+        valid=frames.valid.astype(jnp.float32)[None],
+        frame_valid=jnp.ones((1, num_frames), dtype=jnp.float32),
+        poses_R=frames.poses.R[None],
+        poses_t=frames.poses.t[None],
+        ref_R=T_w_ref.R[None],
+        ref_t=T_w_ref.t[None],
     )
-    if opts.median_filter:
-        dm = DepthMap(median_filter3(dm.depth, dm.mask), dm.mask, dm.confidence)
-    return dsi, dm
+    dsis, dms = process_segments_batched(cam, dsi_cfg, batch, opts)
+    return dsis[0], DepthMap(dms.depth[0], dms.mask[0], dms.confidence[0])
 
 
 # ---------------------------------------------------------------------------
@@ -218,14 +367,57 @@ def run_emvs(
     frames: EventFrames,
     opts: EMVSOptions = EMVSOptions(),
 ) -> EMVSResult:
-    """Process an aggregated event-frame sequence end to end."""
-    mean_depth = 0.5 * (dsi_cfg.z_min + dsi_cfg.z_max)
-    segs = segment_keyframes(frames.poses, mean_depth, opts.keyframe_dist_frac)
+    """Process an aggregated event-frame sequence end to end (batched sweep).
+
+    Segments are grouped into fixed frame-capacity buckets; each
+    bucket is one `process_segments_batched` call plus one batched
+    depth-map -> point-cloud conversion. Per-segment outputs are
+    numerically identical to `run_emvs_looped` (padded frames vote with
+    weight 0).
+    """
+    segs = plan_segments(frames, dsi_cfg, opts)
+    if not segs:
+        return EMVSResult(segments=[], clouds=[])
+
+    by_cap: dict[int, list[tuple[int, int]]] = {}
+    for seg in segs:
+        by_cap.setdefault(bucket_capacity(seg[1] - seg[0]), []).append(seg)
+
+    host = _host_frames(frames)
+    out: dict[tuple[int, int], tuple[SegmentResult, PointCloud]] = {}
+    for cap in sorted(by_cap):
+        seg_list = by_cap[cap]
+        batch = pad_segments(host, seg_list, cap)
+        dsis, dms = process_segments_batched(cam, dsi_cfg, batch, opts)
+        pcs = depth_maps_to_points(cam, dms, SE3(batch.ref_R, batch.ref_t))
+        for k, (start, end) in enumerate(seg_list):
+            dm = DepthMap(dms.depth[k], dms.mask[k], dms.confidence[k])
+            T_w_ref = SE3(batch.ref_R[k], batch.ref_t[k])
+            out[(start, end)] = (
+                SegmentResult(dm, dsis[k], T_w_ref, (start, end)),
+                PointCloud(pcs.points[k], pcs.weights[k], pcs.valid[k]),
+            )
+
+    ordered = [out[seg] for seg in segs]
+    return EMVSResult(segments=[r for r, _ in ordered],
+                      clouds=[c for _, c in ordered])
+
+
+def run_emvs_looped(
+    cam: CameraModel,
+    dsi_cfg: DSIConfig,
+    frames: EventFrames,
+    opts: EMVSOptions = EMVSOptions(),
+) -> EMVSResult:
+    """Reference host-side per-segment loop (the seed's `run_emvs`).
+
+    One device dispatch per segment and one retrace per distinct segment
+    length — kept as the numerical baseline and the A/B counterpart for
+    `benchmarks/segment_batching.py`.
+    """
     results: list[SegmentResult] = []
     clouds: list[PointCloud] = []
-    for start, end in segs:
-        if end - start < 2:  # too little parallax for a meaningful DSI
-            continue
+    for start, end in plan_segments(frames, dsi_cfg, opts):
         sl = jax.tree.map(lambda a: a[start:end], frames)
         T_w_ref = SE3(frames.poses.R[start], frames.poses.t[start])
         dsi, dm = process_segment(cam, dsi_cfg, sl, T_w_ref, opts)

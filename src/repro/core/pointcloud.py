@@ -1,6 +1,7 @@
 """Depth-map -> point-cloud conversion and global map merging (M)."""
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -33,6 +34,21 @@ def depth_map_to_points(cam: CameraModel, dm: DepthMap, T_w_ref: SE3) -> PointCl
         weights=dm.confidence.reshape(-1),
         valid=dm.mask.reshape(-1),
     )
+
+
+@partial(jax.jit, static_argnames=("cam",))
+def depth_maps_to_points(cam: CameraModel, dms: DepthMap, T_w_refs: SE3) -> PointCloud:
+    """Batched `depth_map_to_points`: one device program for a whole bucket.
+
+    dms carries stacked (S, h, w) fields; T_w_refs is a batched SE3
+    ((S, 3, 3), (S, 3)). Returns a PointCloud with (S, h*w, ...) fields —
+    one fixed-size masked cloud per key-frame segment.
+    """
+    return jax.vmap(
+        lambda depth, mask, conf, R, t: depth_map_to_points(
+            cam, DepthMap(depth, mask, conf), SE3(R, t)
+        )
+    )(dms.depth, dms.mask, dms.confidence, T_w_refs.R, T_w_refs.t)
 
 
 def radius_outlier_filter(pc: PointCloud, radius: float = 0.05, min_neighbors: int = 2,

@@ -66,13 +66,21 @@ def backproject_vote_frames(
     block_z: int = 8,
     frames_per_step: int = 1,
     interpret: bool = True,
+    frame_valid: Array | None = None,  # (F,) 1/0 — padded frames vote weight 0
 ) -> Array:
     """Full P + R for a frame batch: P(Z0) in XLA, fused kernel for the rest.
 
     Mirrors the FPGA module split: the Canonical Projection Module
     (homography + normalization) is a cheap batched op; the Proportional
     Projection Module (the hot loop) is the Pallas kernel.
+
+    `frame_valid` supports the padded batched segment sweep: segments are
+    padded to a fixed frame capacity, and padded frames (repeats of a real
+    frame, so their geometry stays finite) are masked out of the vote by
+    zeroing every event weight of that frame.
     """
+    if frame_valid is not None:
+        valid = valid.astype(jnp.float32) * frame_valid.astype(jnp.float32)[:, None]
     if quantized:
         pol = TABLE1
         xy = pol.quantize_events(xy)

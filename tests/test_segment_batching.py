@@ -1,0 +1,175 @@
+"""The padded batched segment sweep must reproduce the looped path exactly.
+
+Covers the full option grid (scatter/matmul/kernel x nearest/bilinear x
+float/quantized) on a small multi-segment sequence, plus the host-side
+segment planning edge cases (single segment, trailing short segment,
+bucket capacities, padding masks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dsi import DSIConfig
+from repro.core.geometry import SE3
+from repro.core.pipeline import (
+    EMVSOptions,
+    bucket_capacity,
+    pad_segments,
+    plan_segments,
+    run_emvs,
+    run_emvs_looped,
+    segment_keyframes,
+)
+from repro.events.aggregation import EventFrames
+
+
+@pytest.fixture(scope="module")
+def mini(cam):
+    """Tiny multi-segment sequence: small event frames keep the 12-combo
+    grid affordable while still spanning several bucket shapes."""
+    from repro.events.aggregation import aggregate
+    from repro.events.simulator import (
+        SceneConfig,
+        make_scene,
+        make_trajectory,
+        simulate_events,
+    )
+
+    scene = make_scene(SceneConfig(name="simulation_3planes", points_per_plane=80))
+    traj = make_trajectory("simulation_3planes", 16)
+    ev = simulate_events(cam, scene, traj, noise_fraction=0.0)
+    frames = aggregate(cam, ev, traj, events_per_frame=192)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=16, z_min=0.6, z_max=4.5)
+    return frames, dsi_cfg
+
+
+def _synthetic_frames(t_x: list[float], events: int = 64, seed: int = 0) -> EventFrames:
+    """Identity-rotation frames translating along x; random in-bounds events."""
+    n = len(t_x)
+    r = np.random.default_rng(seed)
+    xy = np.stack([r.uniform(0, 239, (n, events)), r.uniform(0, 179, (n, events))],
+                  axis=-1).astype(np.float32)
+    t = np.zeros((n, 3), np.float32)
+    t[:, 0] = t_x
+    return EventFrames(
+        xy=jnp.asarray(xy),
+        valid=jnp.ones((n, events), jnp.float32),
+        t_mid=jnp.arange(n, dtype=jnp.float32),
+        poses=SE3(jnp.broadcast_to(jnp.eye(3, dtype=jnp.float32), (n, 3, 3)),
+                  jnp.asarray(t)),
+    )
+
+
+def _assert_results_match(a, b, exact_dsi=False):
+    """exact_dsi: nearest voting accumulates integral counts, so the padded
+    sweep must match the looped path bitwise, not just within tolerance."""
+    assert len(a.segments) == len(b.segments)
+    assert len(a.clouds) == len(b.clouds) == len(a.segments)
+    for sa, sb in zip(a.segments, b.segments):
+        assert sa.frame_range == sb.frame_range
+        if exact_dsi:
+            np.testing.assert_array_equal(np.asarray(sa.dsi), np.asarray(sb.dsi))
+        else:
+            np.testing.assert_allclose(np.asarray(sa.dsi, np.float32),
+                                       np.asarray(sb.dsi, np.float32), atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(sa.depth_map.mask),
+                                      np.asarray(sb.depth_map.mask))
+        m = np.asarray(sa.depth_map.mask)
+        np.testing.assert_allclose(np.asarray(sa.depth_map.depth)[m],
+                                   np.asarray(sb.depth_map.depth)[m], atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sa.T_w_ref.t),
+                                   np.asarray(sb.T_w_ref.t), atol=0)
+    for ca, cb in zip(a.clouds, b.clouds):
+        np.testing.assert_array_equal(np.asarray(ca.valid), np.asarray(cb.valid))
+        v = np.asarray(ca.valid)
+        np.testing.assert_allclose(np.asarray(ca.points)[v],
+                                   np.asarray(cb.points)[v], atol=1e-5)
+
+
+GRID = [(f, v, q)
+        for f in ("scatter", "matmul", "kernel")
+        for v in ("nearest", "bilinear")
+        for q in (False, True)]
+
+
+@pytest.mark.parametrize("formulation,voting,quantized", GRID)
+def test_batched_matches_looped(cam, mini, formulation, voting, quantized):
+    frames, dsi_cfg = mini
+    opts = EMVSOptions(formulation=formulation, voting=voting,
+                       quantized=quantized, keyframe_dist_frac=0.03)
+    segs = plan_segments(frames, dsi_cfg, opts)
+    assert len(segs) >= 2, "scene must produce several segments to batch"
+    _assert_results_match(run_emvs(cam, dsi_cfg, frames, opts),
+                          run_emvs_looped(cam, dsi_cfg, frames, opts),
+                          exact_dsi=(voting == "nearest"))
+
+
+def test_single_segment_trajectory(cam, mini):
+    """A threshold no frame ever crosses -> one segment covering everything."""
+    frames, dsi_cfg = mini
+    opts = EMVSOptions(keyframe_dist_frac=100.0)
+    segs = plan_segments(frames, dsi_cfg, opts)
+    assert segs == [(0, frames.xy.shape[0])]
+    a = run_emvs(cam, dsi_cfg, frames, opts)
+    b = run_emvs_looped(cam, dsi_cfg, frames, opts)
+    assert len(a.segments) == 1
+    _assert_results_match(a, b)
+
+
+def test_trailing_short_segment_dropped(cam):
+    """A trailing 1-frame segment is dropped identically by both paths."""
+    # thresh = mean_depth * frac = 2.0 * 0.05 = 0.1; x steps of 0.04 break
+    # after every 3rd frame -> [(0,3), (3,6), (6,7)] with a 1-frame tail.
+    frames = _synthetic_frames([0.0, 0.04, 0.08, 0.12, 0.16, 0.20, 0.24])
+    segs = segment_keyframes(frames.poses, mean_depth=2.0, frac=0.05)
+    assert segs == [(0, 3), (3, 6), (6, 7)]
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.5, z_max=3.5)
+    opts = EMVSOptions(keyframe_dist_frac=0.05)
+    assert plan_segments(frames, dsi_cfg, opts) == [(0, 3), (3, 6)]
+    a = run_emvs(cam, dsi_cfg, frames, opts)
+    b = run_emvs_looped(cam, dsi_cfg, frames, opts)
+    assert [s.frame_range for s in a.segments] == [(0, 3), (3, 6)]
+    _assert_results_match(a, b)
+
+
+def test_all_segments_too_short(cam):
+    """Every frame its own key frame -> nothing to reconstruct, both paths."""
+    frames = _synthetic_frames([0.0, 0.2, 0.4, 0.6])
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.5, z_max=3.5)
+    opts = EMVSOptions(keyframe_dist_frac=0.05)  # thresh 0.1 < step 0.2
+    assert plan_segments(frames, dsi_cfg, opts) == []
+    for res in (run_emvs(cam, dsi_cfg, frames, opts),
+                run_emvs_looped(cam, dsi_cfg, frames, opts)):
+        assert res.segments == [] and res.clouds == []
+
+
+def test_bucket_capacity():
+    assert bucket_capacity(1) == 4
+    assert bucket_capacity(4) == 4
+    assert bucket_capacity(5) == 8
+    assert bucket_capacity(9) == 12
+    assert bucket_capacity(13) == 16
+    with pytest.raises(ValueError):
+        bucket_capacity(0)
+
+
+def test_pad_segments_masks_and_clamping():
+    frames = _synthetic_frames([0.0, 0.1, 0.2, 0.3, 0.4, 0.5], events=8)
+    batch = pad_segments(frames, [(0, 2), (2, 6)], capacity=4)
+    np.testing.assert_array_equal(np.asarray(batch.frame_valid),
+                                  [[1, 1, 0, 0], [1, 1, 1, 1]])
+    # padded slots repeat the last real frame (finite geometry, zero weight)
+    np.testing.assert_array_equal(np.asarray(batch.xy[0, 2]),
+                                  np.asarray(frames.xy[1]))
+    np.testing.assert_array_equal(np.asarray(batch.xy[0, 3]),
+                                  np.asarray(frames.xy[1]))
+    np.testing.assert_array_equal(np.asarray(batch.poses_t[0, 3]),
+                                  np.asarray(frames.poses.t[1]))
+    # reference pose = first frame of each segment
+    np.testing.assert_array_equal(np.asarray(batch.ref_t),
+                                  np.asarray(frames.poses.t[jnp.asarray([0, 2])]))
+    with pytest.raises(ValueError):
+        pad_segments(frames, [(0, 5)], capacity=4)
