@@ -24,6 +24,16 @@ The voting hot loop supports three interchangeable formulations
 (scatter / one-hot matmul / Pallas kernel) and the float vs Table-1
 quantized datapaths; all are pairwise-validated by tests, batched and
 looped alike.
+
+Streaming entry point: `repro.serving.emvs_stream.EMVSStreamEngine`
+drives this module online — `SegmentPlanner` (below) applies the K
+criterion frame-by-frame as events arrive, closed segments are padded
+into the same capacity buckets by `pad_segments`, and
+`process_segments_batched` sweeps them with the segment axis padded to a
+small fixed set of sizes so the jit cache stays bounded over an
+unbounded stream. Per-segment outputs are bit-identical to `run_emvs`
+on the integer/nearest datapaths for every chunking of the input
+(tests/test_streaming.py).
 """
 from __future__ import annotations
 
@@ -98,24 +108,85 @@ class SegmentBatch(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+class SegmentPlanner:
+    """Incremental key-frame segmentation: the K criterion, frame by frame.
+
+    `push` one frame pose translation at a time; a segment closes the
+    moment translation from the reference view exceeds the threshold, so
+    a streaming caller can start voting a segment before the trajectory
+    ends. `flush` closes the trailing segment at end of stream. The
+    boundaries are exactly those of the offline `segment_keyframes`
+    (which now routes through this planner), and segments shorter than
+    `min_frames` are discarded on close — `plan_segments`' parallax
+    filter, applied online.
+    """
+
+    def __init__(self, threshold: float, min_frames: int = 1):
+        self.threshold = float(threshold)
+        self.min_frames = int(min_frames)
+        self._count = 0
+        self._start = 0
+        self._ref: np.ndarray | None = None
+
+    @property
+    def num_frames(self) -> int:
+        """Frames pushed so far."""
+        return self._count
+
+    @property
+    def open_start(self) -> int:
+        """First frame index of the still-open segment (frames before it
+        can be released by a streaming caller once dispatched)."""
+        return self._start
+
+    def _filtered(self, seg: tuple[int, int]) -> tuple[int, int] | None:
+        return seg if seg[1] - seg[0] >= self.min_frames else None
+
+    def push(self, t: np.ndarray) -> tuple[int, int] | None:
+        """Feed the next frame's translation; returns a closed segment
+        [start, end) the moment the K criterion trips, else None."""
+        t = np.asarray(t)
+        i = self._count
+        self._count = i + 1
+        if self._ref is None:
+            self._ref = t
+            return None
+        if np.linalg.norm(t - self._ref) > self.threshold:
+            closed = (self._start, i)
+            self._start = i
+            self._ref = t
+            return self._filtered(closed)
+        return None
+
+    def flush(self) -> tuple[int, int] | None:
+        """End of stream: close (and return) the trailing open segment."""
+        if self._count == self._start:
+            return None
+        seg = (self._start, self._count)
+        self._start = self._count
+        self._ref = None
+        return self._filtered(seg)
+
+
 def segment_keyframes(poses: SE3, mean_depth: float, frac: float) -> list[tuple[int, int]]:
     """Split frame indices into key-frame segments [(start, end), ...).
 
     A segment's reference view is the pose of its first frame. A new
     segment begins when translation from the reference exceeds
-    frac * mean_depth (the paper's K criterion).
+    frac * mean_depth (the paper's K criterion). Implemented as one
+    sweep of the incremental `SegmentPlanner`, so offline and streaming
+    segmentation cannot drift apart. Zero frames -> no segments.
     """
     t = np.asarray(poses.t)
-    thresh = mean_depth * frac
+    planner = SegmentPlanner(mean_depth * frac, min_frames=1)
     bounds: list[tuple[int, int]] = []
-    start = 0
-    ref = t[0]
-    for i in range(1, t.shape[0]):
-        if np.linalg.norm(t[i] - ref) > thresh:
-            bounds.append((start, i))
-            start = i
-            ref = t[i]
-    bounds.append((start, t.shape[0]))
+    for i in range(t.shape[0]):
+        closed = planner.push(t[i])
+        if closed is not None:
+            bounds.append(closed)
+    tail = planner.flush()
+    if tail is not None:
+        bounds.append(tail)
     return bounds
 
 

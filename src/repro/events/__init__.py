@@ -1,1 +1,2 @@
-"""Event data pipeline: simulator, streaming correction, aggregation."""
+"""Event data pipeline: simulator, streaming correction, incremental
+aggregation (`StreamingAggregator` carries partial frames across chunks)."""

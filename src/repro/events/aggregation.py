@@ -6,6 +6,13 @@ sensor's event rate and storage") and attaches one camera pose per frame
 
 Per the paper's rescheduling, distortion correction runs *before*
 aggregation, per event, in streaming order.
+
+Aggregation is incremental: `StreamingAggregator` accepts raw event
+chunks of arbitrary size and carries the partial-frame remainder across
+pushes, exactly as the device-side A stage holds a partial frame in its
+buffer while waiting for more events. The offline `aggregate` is one big
+push plus a flush, so the stream's tail is emitted as a final padded
+frame instead of being silently dropped.
 """
 from __future__ import annotations
 
@@ -13,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.camera import CameraModel, undistort_events
 from repro.core.geometry import SE3, interpolate_pose
@@ -22,12 +30,44 @@ Array = jax.Array
 
 EVENTS_PER_FRAME = 1024  # paper §4.3
 
+# Pad coordinate for events that exist only to fill out a frame: parked far
+# outside the image (the simulator's convention for invalid events) so every
+# downstream stage masks them even before the validity weight zeroes them.
+PARKED_COORD = -1e4
+
 
 class EventFrames(NamedTuple):
+    """Aggregated frames. Fields produced by this module are host-side
+    (numpy) arrays — staging into device programs happens downstream
+    (`pad_segments`, the streaming engine's frame store) — but every
+    consumer accepts jax arrays interchangeably."""
+
     xy: Array  # (F, E, 2) rectified coords
     valid: Array  # (F, E)
     t_mid: Array  # (F,)
     poses: SE3  # batched (F,3,3),(F,3): per-frame camera pose
+
+
+def empty_event_frames(events_per_frame: int = EVENTS_PER_FRAME) -> EventFrames:
+    """A zero-frame EventFrames with the usual field shapes/dtypes."""
+    return EventFrames(
+        xy=np.zeros((0, events_per_frame, 2), np.float32),
+        valid=np.zeros((0, events_per_frame), bool),
+        t_mid=np.zeros((0,), np.float32),
+        poses=SE3(np.zeros((0, 3, 3), np.float32),
+                  np.zeros((0, 3), np.float32)),
+    )
+
+
+def concat_event_frames(parts: list[EventFrames]) -> EventFrames:
+    """Concatenate EventFrames along the frame axis (empties dropped)."""
+    parts = [p for p in parts if p.xy.shape[0] > 0]
+    if not parts:
+        return empty_event_frames()
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: np.concatenate([np.asarray(x) for x in xs],
+                                                   axis=0), *parts)
 
 
 def pose_at_times(traj: Trajectory, t_query: Array) -> SE3:
@@ -47,20 +87,107 @@ def pose_at_times(traj: Trajectory, t_query: Array) -> SE3:
     return poses
 
 
+class StreamingAggregator:
+    """Incremental A stage: push raw event chunks, receive completed frames.
+
+    Each `push` applies streaming distortion correction to the chunk,
+    prepends the remainder carried from the previous push, and emits every
+    completed `events_per_frame`-sized frame (with its interpolated pose).
+    The tail that does not fill a frame stays buffered for the next push;
+    `flush` emits it as one final frame padded with parked, invalid events.
+
+    Chunk boundaries never change the emitted frames: any chunking of the
+    same stream produces bitwise-identical EventFrames (the streaming
+    engine's offline-equivalence tests lean on exactly this).
+    """
+
+    def __init__(self, cam: CameraModel, traj: Trajectory,
+                 events_per_frame: int = EVENTS_PER_FRAME):
+        if events_per_frame < 1:
+            raise ValueError(f"events_per_frame must be >= 1, got {events_per_frame}")
+        self.cam = cam
+        self.traj = traj
+        self.events_per_frame = int(events_per_frame)
+        self._rem_xy = np.zeros((0, 2), np.float32)
+        self._rem_t = np.zeros((0,), np.float32)
+        self._rem_valid = np.zeros((0,), bool)
+
+    @property
+    def pending_events(self) -> int:
+        """Events buffered toward the next (incomplete) frame."""
+        return self._rem_xy.shape[0]
+
+    def push(self, chunk: EventStream) -> EventFrames:
+        """Ingest a chunk (sorted, contiguous with prior pushes) of events."""
+        xy = (undistort_events(self.cam, chunk.xy)
+              if self.cam.has_distortion() else chunk.xy)
+        xy = np.concatenate([self._rem_xy, np.asarray(xy, np.float32)])
+        t = np.concatenate([self._rem_t, np.asarray(chunk.t, np.float32)])
+        valid = np.concatenate([self._rem_valid, np.asarray(chunk.valid, bool)])
+        e = self.events_per_frame
+        n_frames = xy.shape[0] // e
+        n_keep = n_frames * e
+        self._rem_xy, self._rem_t, self._rem_valid = (
+            xy[n_keep:], t[n_keep:], valid[n_keep:])
+        return self._emit(xy[:n_keep], t[:n_keep], valid[:n_keep], n_frames)
+
+    def flush(self) -> EventFrames:
+        """Emit the buffered tail as one padded frame (empty if no tail)."""
+        e = self.events_per_frame
+        n_rem = self._rem_xy.shape[0]
+        if n_rem == 0:
+            return empty_event_frames(e)
+        # t_mid from the REAL tail events only — the padding exists to fill
+        # the frame shape and must not drag the pose toward the last event
+        t_mid = jnp.median(jnp.asarray(self._rem_t))[None]
+        pad = e - n_rem
+        xy = np.concatenate(
+            [self._rem_xy, np.full((pad, 2), PARKED_COORD, np.float32)])
+        t = np.concatenate(
+            [self._rem_t, np.full((pad,), self._rem_t[-1], np.float32)])
+        valid = np.concatenate([self._rem_valid, np.zeros((pad,), bool)])
+        self._rem_xy = np.zeros((0, 2), np.float32)
+        self._rem_t = np.zeros((0,), np.float32)
+        self._rem_valid = np.zeros((0,), bool)
+        return self._emit(xy, t, valid, 1, t_mid=t_mid)
+
+    def _emit(self, xy: np.ndarray, t: np.ndarray, valid: np.ndarray,
+              n_frames: int, t_mid: Array | None = None) -> EventFrames:
+        e = self.events_per_frame
+        if n_frames == 0:
+            return empty_event_frames(e)
+        t_f = t.reshape(n_frames, e)
+        if t_mid is None:
+            t_mid = jnp.median(jnp.asarray(t_f), axis=1)
+        poses = pose_at_times(self.traj, t_mid)
+        # frames stay on the host (numpy): the consumers — pad_segments and
+        # the streaming engine's frame store — stage host-side, so an eager
+        # device round-trip per emitted frame would be pure waste
+        return EventFrames(
+            xy=xy.reshape(n_frames, e, 2),
+            valid=valid.reshape(n_frames, e),
+            t_mid=np.asarray(t_mid, np.float32),
+            poses=SE3(np.asarray(poses.R, np.float32),
+                      np.asarray(poses.t, np.float32)),
+        )
+
+
 def aggregate(cam: CameraModel, stream: EventStream, traj: Trajectory,
-              events_per_frame: int = EVENTS_PER_FRAME) -> EventFrames:
+              events_per_frame: int = EVENTS_PER_FRAME,
+              keep_tail: bool = True) -> EventFrames:
     """Slice the (sorted) stream into frames of `events_per_frame`.
 
-    Streaming distortion correction is applied first (paper rescheduling).
-    The tail that does not fill a frame is dropped (as on the device,
-    where a partial frame waits for more events).
+    One-big-chunk push through `StreamingAggregator`, so streaming and
+    offline aggregation share one code path. With `keep_tail` (default)
+    the trailing partial frame is flushed as a final padded frame; with
+    `keep_tail=False` it is dropped (the seed's behavior — a device-side
+    partial frame that never saw its remaining events).
     """
-    xy = undistort_events(cam, stream.xy) if cam.has_distortion() else stream.xy
-    n_frames = stream.t.shape[0] // events_per_frame
-    n_keep = n_frames * events_per_frame
-    xy = xy[:n_keep].reshape(n_frames, events_per_frame, 2)
-    valid = stream.valid[:n_keep].reshape(n_frames, events_per_frame)
-    t = stream.t[:n_keep].reshape(n_frames, events_per_frame)
-    t_mid = jnp.median(t, axis=1)
-    poses = pose_at_times(traj, t_mid)
-    return EventFrames(xy=xy, valid=valid, t_mid=t_mid, poses=poses)
+    agg = StreamingAggregator(cam, traj, events_per_frame)
+    full = agg.push(stream)
+    if not keep_tail:
+        return full
+    tail = agg.flush()
+    if full.xy.shape[0] == 0 and tail.xy.shape[0] == 0:
+        return empty_event_frames(events_per_frame)
+    return concat_event_frames([full, tail])

@@ -1,1 +1,3 @@
-"""Serving substrate: prefill/decode engine with continuous batching."""
+"""Serving substrate: prefill/decode LM engine with continuous batching
+(`engine`) and the streaming EMVS engine with double-buffered segment
+dispatch (`emvs_stream`)."""

@@ -1,0 +1,325 @@
+"""Streaming EMVS engine: segments vote while the trajectory still arrives.
+
+The offline `run_emvs` needs the whole aggregated sequence before it can
+plan and bucket key-frame segments. This engine removes that barrier —
+the paper's A/P/R pipelining applied across segments, structured like
+`serving/engine.py`'s continuous batching:
+
+  * events arrive in chunks of arbitrary size; `StreamingAggregator`
+    carries the partial-frame remainder and emits completed frames with
+    interpolated poses;
+  * `SegmentPlanner` applies the K criterion frame-by-frame and closes a
+    segment the moment the translation threshold trips — the same
+    boundaries as offline `segment_keyframes`;
+  * closed segments are padded into the same multiple-of-four
+    frame-capacity buckets as `run_emvs` AND the segment axis S is padded
+    to a small fixed set of sizes (`StreamConfig.segment_buckets`), so
+    `process_segments_batched`'s jit cache stays bounded at
+    |segment_buckets| x |capacities| variants over an unbounded stream;
+  * dispatch is double-buffered: JAX's async dispatch returns as soon as
+    a sweep is enqueued, so the host stages (`pad_segments` + transfer)
+    segment k+1 while segment k is still voting on the device; at most
+    `max_inflight` sweeps run ahead before the engine blocks on the
+    oldest (back-pressure), and frames behind the open segment are
+    evicted from the host window once dispatched.
+
+S-axis padding repeats the last real segment; `lax.map`'s per-segment
+body is independent, so padded rows are discarded on harvest without
+touching real outputs — per-segment results are bit-identical to
+`run_emvs` on the integer/nearest datapaths for every chunking of the
+input (tests/test_streaming.py enforces exactly that).
+
+Poses come from a `Trajectory` queried at frame mid-times, i.e. the pose
+source (a VIO/SLAM tracker in the paper's system) is assumed queryable
+slightly behind the event front; streaming the trajectory itself in
+chunks is future work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core.camera import CameraModel
+from repro.core.detection import DepthMap
+from repro.core.dsi import DSIConfig
+from repro.core.geometry import SE3
+from repro.core.pipeline import (
+    EMVSOptions,
+    EMVSResult,
+    SegmentPlanner,
+    SegmentResult,
+    bucket_capacity,
+    pad_segments,
+    process_segments_batched,
+)
+from repro.core.pointcloud import PointCloud, depth_maps_to_points
+from repro.events.aggregation import (
+    EVENTS_PER_FRAME,
+    EventFrames,
+    StreamingAggregator,
+)
+from repro.events.simulator import EventStream, Trajectory
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Knobs of the streaming engine (all shape-stability related)."""
+
+    events_per_frame: int = EVENTS_PER_FRAME
+    # Fixed segment-axis pad sizes (ascending). Groups larger than the top
+    # bucket are split, so the compiled-variant bound holds regardless of
+    # how many segments a single push closes.
+    segment_buckets: tuple[int, ...] = (1, 2, 4)
+    # Double-buffer depth: sweeps allowed in flight before dispatch blocks
+    # on the oldest. 2 = classic ping-pong (stage k+1 while k votes).
+    max_inflight: int = 2
+
+    def __post_init__(self):
+        if not self.segment_buckets:
+            raise ValueError("segment_buckets must be non-empty")
+        if list(self.segment_buckets) != sorted(set(self.segment_buckets)):
+            raise ValueError(
+                f"segment_buckets must be strictly ascending, got "
+                f"{self.segment_buckets}")
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+
+
+def iter_event_chunks(stream: EventStream, chunk_events: int):
+    """Split a stream into contiguous chunks of `chunk_events` events."""
+    if chunk_events < 1:
+        raise ValueError(f"chunk_events must be >= 1, got {chunk_events}")
+    n = stream.t.shape[0]
+    for i in range(0, n, chunk_events):
+        sl = slice(i, min(i + chunk_events, n))
+        yield EventStream(xy=stream.xy[sl], t=stream.t[sl],
+                          polarity=stream.polarity[sl], valid=stream.valid[sl])
+
+
+class _FrameStore:
+    """Host-side retention window of aggregated frames, globally indexed.
+
+    Frames are appended as they are emitted and evicted once the planner's
+    open segment has moved past them, so memory tracks the open-segment
+    length, not the stream length.
+    """
+
+    def __init__(self):
+        self.base = 0  # global index of the oldest retained frame
+        self._xy: deque[np.ndarray] = deque()
+        self._valid: deque[np.ndarray] = deque()
+        self._t_mid: deque[np.float32] = deque()
+        self._R: deque[np.ndarray] = deque()
+        self._t: deque[np.ndarray] = deque()
+
+    @property
+    def end(self) -> int:
+        """One past the newest retained global frame index."""
+        return self.base + len(self._xy)
+
+    def extend(self, frames: EventFrames) -> None:
+        xy = np.asarray(frames.xy)
+        valid = np.asarray(frames.valid)
+        t_mid = np.asarray(frames.t_mid)
+        r = np.asarray(frames.poses.R)
+        t = np.asarray(frames.poses.t)
+        for k in range(xy.shape[0]):
+            self._xy.append(xy[k])
+            self._valid.append(valid[k])
+            self._t_mid.append(t_mid[k])
+            self._R.append(r[k])
+            self._t.append(t[k])
+
+    def window(self, lo: int, hi: int) -> EventFrames:
+        """Host EventFrames covering global frames [lo, hi)."""
+        if not self.base <= lo < hi <= self.end:
+            raise IndexError(
+                f"window [{lo}, {hi}) outside retained [{self.base}, {self.end})")
+        sel = range(lo - self.base, hi - self.base)
+        return EventFrames(
+            xy=np.stack([self._xy[k] for k in sel]),
+            valid=np.stack([self._valid[k] for k in sel]),
+            t_mid=np.asarray([self._t_mid[k] for k in sel], np.float32),
+            poses=SE3(np.stack([self._R[k] for k in sel]),
+                      np.stack([self._t[k] for k in sel])),
+        )
+
+    def evict_before(self, i: int) -> None:
+        while self.base < i and self._xy:
+            self._xy.popleft()
+            self._valid.popleft()
+            self._t_mid.popleft()
+            self._R.popleft()
+            self._t.popleft()
+            self.base += 1
+
+
+class _InFlight(NamedTuple):
+    """One dispatched sweep: real segments + async device results."""
+
+    segs: list[tuple[int, int]]  # real (unpadded) segments, global indices
+    ref_R: Array  # (S, 3, 3) including padded rows
+    ref_t: Array  # (S, 3)
+    dsis: Array
+    dms: DepthMap
+    pcs: PointCloud
+
+
+class EMVSStreamEngine:
+    """Online EMVS: push event chunks, harvest per-keyframe depth maps.
+
+    Usage:
+        engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts)
+        for chunk in iter_event_chunks(stream, 4096):
+            for seg in engine.push(chunk):   # results ready so far
+                ...
+        result = engine.flush()              # drain; same type as run_emvs
+    """
+
+    def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig, traj: Trajectory,
+                 opts: EMVSOptions = EMVSOptions(),
+                 stream_cfg: StreamConfig = StreamConfig()):
+        self.cam = cam
+        self.dsi_cfg = dsi_cfg
+        self.opts = opts
+        self.stream_cfg = stream_cfg
+        self.aggregator = StreamingAggregator(cam, traj,
+                                              stream_cfg.events_per_frame)
+        mean_depth = 0.5 * (dsi_cfg.z_min + dsi_cfg.z_max)
+        # min_frames=2 is plan_segments' parallax filter, applied online.
+        self.planner = SegmentPlanner(mean_depth * opts.keyframe_dist_frac,
+                                      min_frames=2)
+        self._store = _FrameStore()
+        self._inflight: deque[_InFlight] = deque()
+        self._fresh: list[SegmentResult] = []  # harvested, not yet polled
+        self._done: dict[tuple[int, int], tuple[SegmentResult, PointCloud]] = {}
+        self._flushed = False
+        self.stats = {"chunks": 0, "frames": 0, "segments": 0,
+                      "dispatches": 0, "padded_segments": 0}
+
+    # --- ingest -----------------------------------------------------------
+
+    def push(self, chunk: EventStream) -> list[SegmentResult]:
+        """Feed one event chunk; returns segment results that became ready
+        (without blocking — completed sweeps only)."""
+        if self._flushed:
+            raise RuntimeError("push after flush: the engine is drained")
+        self.stats["chunks"] += 1
+        self._ingest(self.aggregator.push(chunk))
+        return self.poll()
+
+    def _ingest(self, frames: EventFrames) -> None:
+        n = int(frames.xy.shape[0])
+        if n == 0:
+            return
+        self.stats["frames"] += n
+        self._store.extend(frames)
+        closed: list[tuple[int, int]] = []
+        t_host = np.asarray(frames.poses.t)
+        for k in range(n):
+            seg = self.planner.push(t_host[k])
+            if seg is not None:
+                closed.append(seg)
+        self._dispatch_all(closed)
+        # frames before the open segment can no longer be referenced
+        self._store.evict_before(self.planner.open_start)
+
+    # --- dispatch (double-buffered) --------------------------------------
+
+    def _dispatch_all(self, closed: list[tuple[int, int]]) -> None:
+        """Group consecutive same-capacity segments; pad S to a bucket."""
+        i = 0
+        max_s = self.stream_cfg.segment_buckets[-1]
+        while i < len(closed):
+            cap = bucket_capacity(closed[i][1] - closed[i][0])
+            j = i + 1
+            while (j < len(closed)
+                   and bucket_capacity(closed[j][1] - closed[j][0]) == cap):
+                j += 1
+            for off in range(i, j, max_s):
+                self._dispatch(closed[off:min(off + max_s, j)], cap)
+            i = j
+
+    def _s_bucket(self, n: int) -> int:
+        for b in self.stream_cfg.segment_buckets:
+            if b >= n:
+                return b
+        raise AssertionError(f"group of {n} exceeds top segment bucket")
+
+    def _dispatch(self, segs: list[tuple[int, int]], cap: int) -> None:
+        s_pad = self._s_bucket(len(segs))
+        # padded rows repeat the last real segment: lax.map's body is
+        # per-segment independent, so they are pure discarded work
+        padded = list(segs) + [segs[-1]] * (s_pad - len(segs))
+        lo = min(s for s, _ in padded)
+        hi = max(e for _, e in padded)
+        win = self._store.window(lo, hi)
+        shifted = [(s - lo, e - lo) for s, e in padded]
+        batch = pad_segments(win, shifted, cap)
+        # async dispatch: both calls below return with the sweep enqueued,
+        # so the caller stages the next batch while this one votes
+        dsis, dms = process_segments_batched(self.cam, self.dsi_cfg, batch,
+                                             self.opts)
+        pcs = depth_maps_to_points(self.cam, dms, SE3(batch.ref_R, batch.ref_t))
+        self._inflight.append(
+            _InFlight(list(segs), batch.ref_R, batch.ref_t, dsis, dms, pcs))
+        self.stats["segments"] += len(segs)
+        self.stats["dispatches"] += 1
+        self.stats["padded_segments"] += s_pad - len(segs)
+        while len(self._inflight) > self.stream_cfg.max_inflight:
+            # back-pressure: block on the oldest sweep; its results are
+            # queued for the caller's next poll
+            self._fresh.extend(self._harvest(self._inflight.popleft(),
+                                             block=True))
+
+    # --- harvest ----------------------------------------------------------
+
+    def _harvest(self, inf: _InFlight, block: bool) -> list[SegmentResult]:
+        if block:
+            inf.dms.depth.block_until_ready()
+        results: list[SegmentResult] = []
+        for k, (start, end) in enumerate(inf.segs):
+            dm = DepthMap(inf.dms.depth[k], inf.dms.mask[k],
+                          inf.dms.confidence[k])
+            res = SegmentResult(dm, inf.dsis[k],
+                                SE3(inf.ref_R[k], inf.ref_t[k]), (start, end))
+            pc = PointCloud(inf.pcs.points[k], inf.pcs.weights[k],
+                            inf.pcs.valid[k])
+            self._done[(start, end)] = (res, pc)
+            results.append(res)
+        return results
+
+    def poll(self) -> list[SegmentResult]:
+        """Results that became ready since the last poll: back-pressure
+        harvests plus every in-flight sweep the device has finished."""
+        out, self._fresh = self._fresh, []
+        while self._inflight and self._inflight[0].dms.depth.is_ready():
+            out.extend(self._harvest(self._inflight.popleft(), block=False))
+        return out
+
+    def flush(self) -> EMVSResult:
+        """End of stream: flush the partial frame and the open segment,
+        drain all in-flight sweeps, and return the accumulated result
+        (same ordering and types as offline `run_emvs`)."""
+        if not self._flushed:
+            self._ingest(self.aggregator.flush())
+            tail = self.planner.flush()
+            if tail is not None:
+                self._dispatch_all([tail])
+            self._flushed = True
+        while self._inflight:
+            self._harvest(self._inflight.popleft(), block=True)
+        self._fresh.clear()  # flush reports everything via result()
+        return self.result()
+
+    def result(self) -> EMVSResult:
+        """Results harvested so far, in frame order (complete after flush)."""
+        keys = sorted(self._done)
+        return EMVSResult(segments=[self._done[k][0] for k in keys],
+                          clouds=[self._done[k][1] for k in keys])

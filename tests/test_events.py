@@ -8,7 +8,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.camera import CameraModel, in_bounds_mask, undistort_events, distort_normalized
-from repro.events.aggregation import aggregate, pose_at_times
+from repro.events.aggregation import (
+    PARKED_COORD,
+    StreamingAggregator,
+    aggregate,
+    empty_event_frames,
+    pose_at_times,
+)
+from repro.events.simulator import EventStream
 from repro.events.simulator import (
     SceneConfig,
     absrel,
@@ -37,6 +44,65 @@ def test_aggregation_shapes_and_poses(cam, small_scene):
     assert frames.poses.R.shape == (F, 3, 3)
     # frame mid-times increase
     assert (np.diff(np.asarray(frames.t_mid)) > 0).all()
+
+
+def test_aggregate_keeps_tail(cam, small_scene):
+    """The stream's tail must become a final padded frame, not be dropped."""
+    ev, traj = small_scene["events"], small_scene["traj"]
+    n = int(ev.t.shape[0])
+    assert n % 1024 != 0, "fixture must leave a partial tail"
+    frames = aggregate(cam, ev, traj, events_per_frame=1024)
+    assert frames.xy.shape[0] == -(-n // 1024)  # ceil: tail kept
+    dropped = aggregate(cam, ev, traj, events_per_frame=1024, keep_tail=False)
+    assert dropped.xy.shape[0] == n // 1024  # the seed's behavior, opt-in
+    # tail frame: real events first, then parked invalid padding
+    r = n % 1024
+    tail_xy = np.asarray(frames.xy[-1])
+    tail_valid = np.asarray(frames.valid[-1])
+    np.testing.assert_array_equal(tail_xy[:r], np.asarray(ev.xy[-r:]))
+    assert (tail_xy[r:] == PARKED_COORD).all()
+    assert not tail_valid[r:].any()
+    # every frame before the tail is untouched by the fix
+    np.testing.assert_array_equal(np.asarray(frames.xy[:-1]),
+                                  np.asarray(dropped.xy))
+
+
+def test_streaming_aggregator_carries_remainder(cam, small_scene):
+    """Ragged pushes: remainder events cross chunk boundaries, none lost."""
+    ev, traj = small_scene["events"], small_scene["traj"]
+    n = int(ev.t.shape[0])
+    agg = StreamingAggregator(cam, traj, events_per_frame=1024)
+    sizes = [700, 1311, 257, 2048]
+    parts, i, k = [], 0, 0
+    while i < n:
+        j = min(i + sizes[k % len(sizes)], n)
+        parts.append(agg.push(EventStream(
+            xy=ev.xy[i:j], t=ev.t[i:j],
+            polarity=ev.polarity[i:j], valid=ev.valid[i:j])))
+        i, k = j, k + 1
+    assert agg.pending_events == n % 1024
+    parts.append(agg.flush())
+    assert agg.pending_events == 0
+    got_xy = np.concatenate([np.asarray(p.xy) for p in parts])
+    ref = small_scene["frames"]
+    assert got_xy.shape[0] == -(-n // 1024)
+    np.testing.assert_array_equal(got_xy, np.asarray(ref.xy))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.t_mid) for p in parts]),
+        np.asarray(ref.t_mid))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.poses.t) for p in parts]),
+        np.asarray(ref.poses.t))
+
+
+def test_aggregate_empty_stream(cam, small_scene):
+    traj = small_scene["traj"]
+    ev = EventStream(xy=jnp.zeros((0, 2)), t=jnp.zeros((0,)),
+                     polarity=jnp.zeros((0,), jnp.int8),
+                     valid=jnp.zeros((0,), bool))
+    frames = aggregate(cam, ev, traj, events_per_frame=64)
+    assert frames.xy.shape == (0, 64, 2)
+    assert empty_event_frames(64).xy.shape == (0, 64, 2)
 
 
 def test_pose_interpolation_monotone(small_scene):

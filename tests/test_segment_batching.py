@@ -146,6 +146,20 @@ def test_all_segments_too_short(cam):
         assert res.segments == [] and res.clouds == []
 
 
+def test_zero_frames_empty_result(cam):
+    """Regression: zero-frame EventFrames used to crash segment_keyframes
+    (t[0] IndexError); run_emvs must return an empty EMVSResult instead."""
+    from repro.events.aggregation import empty_event_frames
+
+    frames = empty_event_frames(64)
+    assert segment_keyframes(frames.poses, mean_depth=2.0, frac=0.05) == []
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.5, z_max=3.5)
+    assert plan_segments(frames, dsi_cfg, EMVSOptions()) == []
+    for fn in (run_emvs, run_emvs_looped):
+        res = fn(cam, dsi_cfg, frames, EMVSOptions())
+        assert res.segments == [] and res.clouds == []
+
+
 def test_bucket_capacity():
     assert bucket_capacity(1) == 4
     assert bucket_capacity(4) == 4

@@ -1,0 +1,212 @@
+"""Streaming-vs-offline equivalence: the online engine must reproduce
+`run_emvs` exactly, for every chunking of the input.
+
+The engine (incremental aggregation -> frame-by-frame K criterion ->
+double-buffered padded dispatch) shares the padded batched sweep with the
+offline path, so nearest/integer datapaths must match bitwise and
+bilinear to float tolerance — the same split `test_segment_batching`
+enforces between the batched and looped offline paths. Also covered:
+the compiled-variant bound (|segment_buckets| x |capacities|), planner
+equivalence on random trajectories, and aggregator chunking invariance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dsi import DSIConfig
+from repro.core.geometry import SE3
+from repro.core.pipeline import (
+    EMVSOptions,
+    SegmentPlanner,
+    bucket_capacity,
+    plan_segments,
+    process_segments_batched,
+    run_emvs,
+    segment_keyframes,
+)
+from repro.events.aggregation import StreamingAggregator, aggregate
+from repro.events.simulator import EventStream, Trajectory
+from repro.serving.emvs_stream import (
+    EMVSStreamEngine,
+    StreamConfig,
+    iter_event_chunks,
+)
+from test_segment_batching import GRID, _assert_results_match
+
+EVENTS_PER_FRAME = 224  # does not divide the stream -> exercises the tail
+
+
+@pytest.fixture(scope="module")
+def stream_scene(cam, small_scene):
+    """small_scene's stream re-aggregated at a size that keeps the
+    12-combo x 3-chunking grid affordable and leaves a partial tail."""
+    ev = small_scene["events"]
+    traj = small_scene["traj"]
+    n = int(ev.t.shape[0])
+    keep = min(n, 17 * EVENTS_PER_FRAME + 32)  # 17 full frames + a tail
+    ev = EventStream(xy=ev.xy[:keep], t=ev.t[:keep],
+                     polarity=ev.polarity[:keep], valid=ev.valid[:keep])
+    frames = aggregate(cam, ev, traj, events_per_frame=EVENTS_PER_FRAME)
+    assert int(frames.xy.shape[0]) * EVENTS_PER_FRAME > keep, "tail expected"
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=16, z_min=0.6, z_max=4.5)
+    return ev, traj, frames, dsi_cfg
+
+
+def _stream(engine: EMVSStreamEngine, ev: EventStream, chunk: int):
+    for c in iter_event_chunks(ev, chunk):
+        engine.push(c)
+    return engine.flush()
+
+
+@pytest.mark.parametrize("formulation,voting,quantized", GRID)
+def test_stream_matches_offline_all_chunkings(cam, stream_scene, formulation,
+                                              voting, quantized):
+    ev, traj, frames, dsi_cfg = stream_scene
+    opts = EMVSOptions(formulation=formulation, voting=voting,
+                       quantized=quantized, keyframe_dist_frac=0.03)
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    assert len(ref.segments) >= 2, "scene must close several segments"
+    n = int(ev.t.shape[0])
+    for chunk in (EVENTS_PER_FRAME, 997, n):  # one frame, prime, whole
+        engine = EMVSStreamEngine(
+            cam, dsi_cfg, traj, opts,
+            StreamConfig(events_per_frame=EVENTS_PER_FRAME))
+        res = _stream(engine, ev, chunk)
+        _assert_results_match(res, ref, exact_dsi=(voting == "nearest"))
+
+
+def test_stream_results_arrive_before_flush(cam, stream_scene):
+    """Online operation: segments finish while events still arrive."""
+    ev, traj, _, dsi_cfg = stream_scene
+    opts = EMVSOptions(keyframe_dist_frac=0.03)
+    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts,
+                              StreamConfig(events_per_frame=EVENTS_PER_FRAME))
+    early = []
+    for c in iter_event_chunks(ev, EVENTS_PER_FRAME):
+        early.extend(engine.push(c))
+    res = engine.flush()
+    assert len(early) >= 1, "no segment completed before end of stream"
+    assert len(res.segments) > len(early), "flush must add the tail segments"
+    ranges = [s.frame_range for s in res.segments]
+    assert ranges == sorted(ranges)
+    assert engine.stats["frames"] == engine.planner.num_frames
+
+
+def test_stream_compile_cache_bounded(cam, stream_scene):
+    """Streaming any chunking compiles at most |S buckets| x |capacities|
+    variants of process_segments_batched — the jit cache cannot grow with
+    the stream."""
+    ev, traj, frames, dsi_cfg = stream_scene
+    opts = EMVSOptions(keyframe_dist_frac=0.02)  # more, varied segments
+    caps = {bucket_capacity(b - a)
+            for a, b in plan_segments(frames, dsi_cfg, opts)}
+    scfg = StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                        segment_buckets=(1, 2, 4))
+    jax.clear_caches()
+    for chunk in (EVENTS_PER_FRAME, 997, int(ev.t.shape[0])):
+        engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts, scfg)
+        _stream(engine, ev, chunk)
+    bound = len(scfg.segment_buckets) * len(caps)
+    assert process_segments_batched._cache_size() <= bound, (
+        process_segments_batched._cache_size(), bound)
+
+
+def test_flush_without_events(cam):
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.6, z_max=4.5)
+    traj = Trajectory(times=jnp.asarray([0.0, 1.0]),
+                      poses=SE3(jnp.broadcast_to(jnp.eye(3), (2, 3, 3)),
+                                jnp.zeros((2, 3))))
+    engine = EMVSStreamEngine(cam, dsi_cfg, traj)
+    res = engine.flush()
+    assert res.segments == [] and res.clouds == []
+    with pytest.raises(RuntimeError):
+        engine.push(EventStream(xy=jnp.zeros((1, 2)), t=jnp.zeros((1,)),
+                                polarity=jnp.zeros((1,), jnp.int8),
+                                valid=jnp.ones((1,), bool)))
+
+
+# --- property tests -------------------------------------------------------
+
+
+def _reference_segments(t: np.ndarray, thresh: float) -> list[tuple[int, int]]:
+    """The seed's offline K-criterion loop, kept inline as an independent
+    reference so planner and segment_keyframes are checked against the
+    original algorithm, not against each other."""
+    if t.shape[0] == 0:
+        return []
+    bounds, start, ref = [], 0, t[0]
+    for i in range(1, t.shape[0]):
+        if np.linalg.norm(t[i] - ref) > thresh:
+            bounds.append((start, i))
+            start, ref = i, t[i]
+    bounds.append((start, t.shape[0]))
+    return bounds
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 48),
+       thresh=st.sampled_from([0.02, 0.05, 0.1, 0.25]))
+def test_incremental_segmentation_matches_offline(seed, n, thresh):
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.uniform(-0.08, 0.08, (n, 3)).astype(np.float32), axis=0)
+
+    ref = _reference_segments(t, thresh)
+
+    planner = SegmentPlanner(thresh, min_frames=1)
+    got: list[tuple[int, int]] = []
+    for i in range(n):
+        closed = planner.push(t[i])
+        if closed is not None:
+            got.append(closed)
+    tail = planner.flush()
+    if tail is not None:
+        got.append(tail)
+    assert got == ref
+
+    poses = SE3(np.broadcast_to(np.eye(3, dtype=np.float32), (n, 3, 3)), t)
+    assert segment_keyframes(poses, mean_depth=1.0, frac=thresh) == ref
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000), e=st.sampled_from([16, 64, 100]),
+       n_cuts=st.integers(0, 6))
+def test_aggregator_chunking_invariance(cam, seed, e, n_cuts):
+    """Any chunk split of a stream aggregates to bitwise-identical frames."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(0, 600))
+    ev = EventStream(
+        xy=jnp.asarray(rng.uniform(0, 200, (n, 2)).astype(np.float32)),
+        t=jnp.asarray(np.sort(rng.uniform(0, 1, n).astype(np.float32))),
+        polarity=jnp.asarray(rng.choice([-1, 1], n).astype(np.int8)),
+        valid=jnp.asarray(rng.random(n) > 0.1),
+    )
+    traj = Trajectory(
+        times=jnp.asarray([0.0, 0.5, 1.0]),
+        poses=SE3(jnp.broadcast_to(jnp.eye(3), (3, 3, 3)),
+                  jnp.asarray(np.linspace(0, 0.3, 9, dtype=np.float32)
+                              .reshape(3, 3))),
+    )
+    ref = aggregate(cam, ev, traj, events_per_frame=e)
+
+    cuts = sorted(rng.integers(0, n + 1, size=n_cuts).tolist())
+    agg = StreamingAggregator(cam, traj, events_per_frame=e)
+    parts = []
+    for lo, hi in zip([0] + cuts, cuts + [n]):
+        chunk = EventStream(xy=ev.xy[lo:hi], t=ev.t[lo:hi],
+                            polarity=ev.polarity[lo:hi], valid=ev.valid[lo:hi])
+        parts.append(agg.push(chunk))
+    parts.append(agg.flush())
+
+    got_xy = np.concatenate([np.asarray(p.xy) for p in parts])
+    got_valid = np.concatenate([np.asarray(p.valid) for p in parts])
+    got_tmid = np.concatenate([np.asarray(p.t_mid) for p in parts])
+    got_t = np.concatenate([np.asarray(p.poses.t) for p in parts])
+    np.testing.assert_array_equal(got_xy, np.asarray(ref.xy))
+    np.testing.assert_array_equal(got_valid, np.asarray(ref.valid))
+    np.testing.assert_array_equal(got_tmid, np.asarray(ref.t_mid))
+    np.testing.assert_array_equal(got_t, np.asarray(ref.poses.t))
