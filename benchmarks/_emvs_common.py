@@ -1,9 +1,12 @@
 """Shared benchmark scaffolding: the four evaluation sequences of the
 paper (simulation_3planes, simulation_3walls, slider_close, slider_far)
-at a size that runs in seconds on CPU."""
+at a size that runs in seconds on CPU, plus the machine-readable
+`BENCH_emvs.json` emitter the perf-tracking benchmarks share."""
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from functools import lru_cache
 
 import jax
@@ -24,6 +27,35 @@ from repro.events.simulator import (
 
 SEQUENCES = ("simulation_3planes", "simulation_3walls", "slider_close",
              "slider_far")
+
+BENCH_JSON = "BENCH_emvs.json"
+
+
+def update_bench_json(section: str, record: dict,
+                      path: str | None = None) -> str:
+    """Merge one benchmark's record into the shared BENCH_emvs.json.
+
+    Each benchmark owns a top-level section ("segment_batching",
+    "sharded_sweep", "streaming_latency") so CI and later sessions can
+    track the perf trajectory (segments/s, first-depth latency) without
+    parsing stdout. Existing sections from other benchmarks survive;
+    a corrupt file is replaced rather than crashing the run.
+    """
+    path = path or BENCH_JSON
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            if not isinstance(data, dict):
+                data = {}
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data[section] = record
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 @lru_cache(maxsize=None)

@@ -15,10 +15,16 @@ Headline metric is cold segments/s; Mev/s counts real (unpadded) events.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import numpy as np
+
+try:  # script invocation (python benchmarks/segment_batching.py)
+    from _emvs_common import update_bench_json
+except ImportError:  # module invocation (python -m benchmarks.segment_batching)
+    from benchmarks._emvs_common import update_bench_json
 
 from repro.core.camera import CameraModel
 from repro.core.dsi import DSIConfig
@@ -82,6 +88,13 @@ def _check_match(a, b):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default=None,
+                    help="BENCH_emvs.json path (default: repo cwd)")
+    # parse_known_args: benchmarks.run invokes this main() with the
+    # driver's own flags (e.g. --skip-slow) still on sys.argv
+    args, _ = ap.parse_known_args()
+
     cam, frames, dsi_cfg = build_sequence()
     opts = EMVSOptions(keyframe_dist_frac=0.02)
     segs = plan_segments(frames, dsi_cfg, opts)
@@ -109,6 +122,20 @@ def main() -> None:
           f"{warm_speedup:.2f}x warm")
     if cold_speedup < 1.5:
         print("WARNING: cold speedup below the 1.5x acceptance threshold")
+
+    path = update_bench_json("segment_batching", {
+        "segments": n_seg,
+        "events": n_ev,
+        "looped": {"cold_s": round(cold_l, 3), "warm_s": round(warm_l, 3),
+                   "cold_segments_per_s": round(n_seg / cold_l, 3),
+                   "warm_segments_per_s": round(n_seg / warm_l, 3)},
+        "batched": {"cold_s": round(cold_b, 3), "warm_s": round(warm_b, 3),
+                    "cold_segments_per_s": round(n_seg / cold_b, 3),
+                    "warm_segments_per_s": round(n_seg / warm_b, 3)},
+        "cold_speedup": round(cold_speedup, 3),
+        "warm_speedup": round(warm_speedup, 3),
+    }, path=args.json_out)
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,11 @@ import time
 import jax
 import numpy as np
 
+try:  # script invocation (python benchmarks/streaming_latency.py)
+    from _emvs_common import update_bench_json
+except ImportError:  # module invocation
+    from benchmarks._emvs_common import update_bench_json
+
 from repro.core.camera import CameraModel
 from repro.core.dsi import DSIConfig
 from repro.core.pipeline import (
@@ -71,6 +76,8 @@ def main() -> None:
                     help="tiny sequence for CI smoke (same code path)")
     ap.add_argument("--chunk-frames", type=int, default=1,
                     help="chunk size in aggregated frames")
+    ap.add_argument("--json-out", default=None,
+                    help="BENCH_emvs.json path (default: repo cwd)")
     args = ap.parse_args()
 
     cam, traj, ev, e_frame, dsi_cfg = build_sequence(args.dry_run)
@@ -136,6 +143,18 @@ def main() -> None:
         f"first-segment latency {first:.2f}s not below offline "
         f"end-to-end {t_offline:.2f}s")
     print("OK: first depth map arrives before the offline path finishes")
+
+    path = update_bench_json("streaming_latency", {
+        "dry_run": bool(args.dry_run),
+        "events": n_events,
+        "segments": len(res.segments),
+        "offline_end_to_end_s": round(t_offline, 3),
+        "streaming_end_to_end_s": round(t_total, 3),
+        "first_depth_latency_s": round(first, 3),
+        "first_depth_speedup": round(t_offline / first, 3),
+        "compiled_variants": int(variants),
+    }, path=args.json_out)
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

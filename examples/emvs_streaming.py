@@ -9,7 +9,13 @@ they complete. The final result is bit-identical to `run_emvs` on the
 default nearest/integer datapath.
 
     PYTHONPATH=src python examples/emvs_streaming.py \
-        [--scene simulation_3walls] [--chunk-frames 2] [--out /tmp/emvs_stream.npz]
+        [--scene simulation_3walls] [--chunk-frames 2] [--sweep sharded] \
+        [--out /tmp/emvs_stream.npz]
+
+`--sweep sharded` dispatches each closed-segment bucket through
+`repro.distributed.emvs.process_segments_sharded` (segment axis sharded
+over all local devices) instead of the serial `lax.map` sweep; results
+stay bit-identical on the default nearest/integer datapath.
 """
 from __future__ import annotations
 
@@ -42,6 +48,9 @@ def main() -> None:
     ap.add_argument("--planes", type=int, default=64)
     ap.add_argument("--chunk-frames", type=int, default=1,
                     help="push granularity, in aggregated frames")
+    ap.add_argument("--sweep", default="batched",
+                    choices=["batched", "sharded"],
+                    help="segment-sweep backend (see StreamConfig.sweep)")
     ap.add_argument("--out", default="/tmp/emvs_stream.npz")
     args = ap.parse_args()
 
@@ -56,7 +65,8 @@ def main() -> None:
     print(f"scene={args.scene}: {int(events.valid.sum())} events, "
           f"DSI {dsi_cfg.shape}, chunk={args.chunk_frames} frame(s)")
 
-    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts, StreamConfig())
+    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts,
+                              StreamConfig(sweep=args.sweep))
     t0 = time.time()
 
     def report(seg, when):

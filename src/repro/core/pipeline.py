@@ -25,6 +25,14 @@ The voting hot loop supports three interchangeable formulations
 quantized datapaths; all are pairwise-validated by tests, batched and
 looped alike.
 
+Sweep backends: `run_emvs(sweep=...)` selects how each bucket runs.
+`"batched"` (default) is the serial `lax.map` program above;
+`"sharded"` hands the bucket to `repro.distributed.emvs
+.process_segments_sharded`, which runs the SAME sweep body
+(`sweep_segment_batch`) with the segment axis sharded across mesh
+devices — the paper's key-frame-level parallelism. The backends agree
+bitwise on the integer/nearest datapaths (tests/test_sharded_sweep.py).
+
 Streaming entry point: `repro.serving.emvs_stream.EMVSStreamEngine`
 drives this module online — `SegmentPlanner` (below) applies the K
 criterion frame-by-frame as events arrive, closed segments are padded
@@ -224,6 +232,11 @@ def _host_frames(frames: EventFrames) -> EventFrames:
 def pad_segments(frames: EventFrames, segs: Sequence[tuple[int, int]],
                  capacity: int) -> SegmentBatch:
     """Gather a list of same-bucket segments into one padded SegmentBatch."""
+    if not segs:
+        raise ValueError(
+            "pad_segments needs at least one segment: an empty segment "
+            "list has no reference pose and nothing to sweep (callers "
+            "must skip dispatch for empty buckets)")
     idx_rows, fv_rows = [], []
     for start, end in segs:
         n = end - start
@@ -336,22 +349,21 @@ def precompute_segment_geometry(
                                      T_w_ref, planes, z0)
 
 
-@partial(jax.jit, static_argnames=("cam", "dsi_cfg", "opts"))
-def process_segments_batched(
+def sweep_segment_batch(
     cam: CameraModel,
     dsi_cfg: DSIConfig,
     batch: SegmentBatch,
     opts: EMVSOptions,
 ) -> tuple[Array, DepthMap]:
-    """Vote, quantize-store, detect and filter a whole segment bucket.
+    """Traceable body of the segment sweep: vote, quantize-store, detect
+    and filter a whole `SegmentBatch`.
 
-    One compiled sweep: `lax.map` over the segment axis, so within a
-    `run_emvs` call the trace happens once per bucket instead of once per
-    segment, and no intermediate leaves the device. (The jit cache is
-    keyed on the full batch shape — segment count S, capacity C, events E
-    — so distinct sequences can still retrace; a streaming caller should
-    pad S to stable sizes.) Returns stacked per-segment DSIs
-    (S, Nz, h, w) and a DepthMap with (S, h, w) fields.
+    Deliberately un-jitted: `process_segments_batched` wraps it in one
+    jit per bucket shape, and `repro.distributed.emvs
+    .process_segments_sharded` wraps it in a `shard_map` over the segment
+    axis — every segment is independent (the DSI resets per key frame),
+    so both wrappers run the exact same per-segment program and their
+    outputs agree bitwise on the integer/nearest datapaths.
     """
     planes = dsi_cfg.planes()
     z0 = planes[dsi_cfg.num_planes // 2]
@@ -401,6 +413,30 @@ def process_segments_batched(
     return jax.lax.map(one_segment, batch)
 
 
+@partial(jax.jit, static_argnames=("cam", "dsi_cfg", "opts"))
+def process_segments_batched(
+    cam: CameraModel,
+    dsi_cfg: DSIConfig,
+    batch: SegmentBatch,
+    opts: EMVSOptions,
+) -> tuple[Array, DepthMap]:
+    """Vote, quantize-store, detect and filter a whole segment bucket.
+
+    One compiled sweep: `lax.map` over the segment axis, so within a
+    `run_emvs` call the trace happens once per bucket instead of once per
+    segment, and no intermediate leaves the device. (The jit cache is
+    keyed on the full batch shape — segment count S, capacity C, events E
+    — so distinct sequences can still retrace; a streaming caller should
+    pad S to stable sizes.) Returns stacked per-segment DSIs
+    (S, Nz, h, w) and a DepthMap with (S, h, w) fields.
+
+    This is the `sweep="batched"` backend of `run_emvs`; the
+    `sweep="sharded"` backend (`process_segments_sharded`) runs the same
+    body with the segment axis sharded across mesh devices.
+    """
+    return sweep_segment_batch(cam, dsi_cfg, batch, opts)
+
+
 def process_segment(
     cam: CameraModel,
     dsi_cfg: DSIConfig,
@@ -437,15 +473,49 @@ def run_emvs(
     dsi_cfg: DSIConfig,
     frames: EventFrames,
     opts: EMVSOptions = EMVSOptions(),
+    *,
+    sweep: str = "batched",
+    mesh: Any | None = None,
 ) -> EMVSResult:
-    """Process an aggregated event-frame sequence end to end (batched sweep).
+    """Process an aggregated event-frame sequence end to end.
 
     Segments are grouped into fixed frame-capacity buckets; each
-    bucket is one `process_segments_batched` call plus one batched
-    depth-map -> point-cloud conversion. Per-segment outputs are
-    numerically identical to `run_emvs_looped` (padded frames vote with
-    weight 0).
+    bucket is one sweep call plus one batched depth-map -> point-cloud
+    conversion. Per-segment outputs are numerically identical to
+    `run_emvs_looped` (padded frames vote with weight 0).
+
+    sweep: which segment-sweep backend runs each bucket.
+      * "batched" — `process_segments_batched`: one `lax.map` device
+        program per bucket (serial over segments within the program).
+      * "sharded" — `repro.distributed.emvs.process_segments_sharded`:
+        the segment axis of each bucket is sharded across the devices of
+        `mesh` (default: a 1-D mesh over all local devices), so
+        concurrent segments vote on different devices — the paper's
+        key-frame-level parallelism. The segment list is padded to a
+        multiple of the mesh's segment-axis size by repeating the last
+        segment; padded rows are discarded on harvest, and real rows are
+        bit-identical to the batched backend on the integer/nearest
+        datapaths (allclose on bilinear).
     """
+    if sweep not in ("batched", "sharded"):
+        raise ValueError(
+            f"unknown sweep backend {sweep!r}: expected 'batched' or 'sharded'")
+    if mesh is not None and sweep != "sharded":
+        raise ValueError(
+            "mesh= is only meaningful with sweep='sharded'; the batched "
+            "sweep would silently ignore it")
+    n_shard = 1
+    if sweep == "sharded":
+        from repro.distributed.emvs import (
+            make_segment_mesh,
+            process_segments_sharded,
+            segment_axis_size,
+        )
+
+        if mesh is None:
+            mesh = make_segment_mesh()
+        n_shard = segment_axis_size(mesh)
+
     segs = plan_segments(frames, dsi_cfg, opts)
     if not segs:
         return EMVSResult(segments=[], clouds=[])
@@ -458,8 +528,15 @@ def run_emvs(
     out: dict[tuple[int, int], tuple[SegmentResult, PointCloud]] = {}
     for cap in sorted(by_cap):
         seg_list = by_cap[cap]
-        batch = pad_segments(host, seg_list, cap)
-        dsis, dms = process_segments_batched(cam, dsi_cfg, batch, opts)
+        # sharded sweeps need S divisible by the mesh's segment axis:
+        # repeat the last segment (independent rows -> pure discarded work)
+        run_list = seg_list + [seg_list[-1]] * (-len(seg_list) % n_shard)
+        batch = pad_segments(host, run_list, cap)
+        if sweep == "sharded":
+            dsis, dms = process_segments_sharded(cam, dsi_cfg, batch, opts,
+                                                 mesh=mesh)
+        else:
+            dsis, dms = process_segments_batched(cam, dsi_cfg, batch, opts)
         pcs = depth_maps_to_points(cam, dms, SE3(batch.ref_R, batch.ref_t))
         for k, (start, end) in enumerate(seg_list):
             dm = DepthMap(dms.depth[k], dms.mask[k], dms.confidence[k])

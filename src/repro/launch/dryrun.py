@@ -182,7 +182,8 @@ def _lower_emvs(cfg: ArchConfig, cell: ShapeCell, mesh,
     from repro.distributed import sharding as shd
 
     with mesh:
-        lowered = jax.jit(step).lower(specs["xy"], specs["valid"], specs["H"],
+        lowered = jax.jit(step).lower(specs["xy"], specs["valid"],
+                                      specs["frame_valid"], specs["H"],
                                       specs["phi"])
     n_votes = (segments or 1) * frames * events * dsi_cfg.num_planes
     return lowered, {"emvs_votes": n_votes,

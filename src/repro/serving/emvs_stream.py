@@ -23,11 +23,21 @@ the paper's A/P/R pipelining applied across segments, structured like
     oldest (back-pressure), and frames behind the open segment are
     evicted from the host window once dispatched.
 
-S-axis padding repeats the last real segment; `lax.map`'s per-segment
+S-axis padding repeats the last real segment; the per-segment sweep
 body is independent, so padded rows are discarded on harvest without
 touching real outputs — per-segment results are bit-identical to
 `run_emvs` on the integer/nearest datapaths for every chunking of the
 input (tests/test_streaming.py enforces exactly that).
+
+Sweep backends: `StreamConfig(sweep=...)` picks how each dispatch runs,
+mirroring `run_emvs(sweep=...)`. `"batched"` (default) sweeps the
+bucket serially in one `lax.map` program; `"sharded"` shards the
+bucket's segment axis across the engine's mesh
+(`repro.distributed.emvs.process_segments_sharded`), so concurrent
+segments vote on different devices. With `"sharded"` the engine rounds
+every S bucket up to a multiple of the mesh's segment-axis size, so
+dispatch shapes stay shard-stable (and the compiled-variant bound
+holds) over an unbounded stream.
 
 Poses come from a `Trajectory` queried at frame mid-times, i.e. the pose
 source (a VIO/SLAM tracker in the paper's system) is assumed queryable
@@ -79,6 +89,15 @@ class StreamConfig:
     # Double-buffer depth: sweeps allowed in flight before dispatch blocks
     # on the oldest. 2 = classic ping-pong (stage k+1 while k votes).
     max_inflight: int = 2
+    # Segment-sweep backend: "batched" runs each dispatch as one lax.map
+    # program (`process_segments_batched`); "sharded" shards the segment
+    # axis across the devices of the engine's mesh
+    # (`repro.distributed.emvs.process_segments_sharded`), so concurrent
+    # segments vote on different devices. With "sharded" the engine
+    # rounds every segment bucket up to a multiple of the mesh's
+    # segment-axis size, keeping dispatch shapes shard-stable over an
+    # unbounded stream.
+    sweep: str = "batched"
 
     def __post_init__(self):
         if not self.segment_buckets:
@@ -89,6 +108,10 @@ class StreamConfig:
                 f"{self.segment_buckets}")
         if self.max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if self.sweep not in ("batched", "sharded"):
+            raise ValueError(
+                f"unknown sweep backend {self.sweep!r}: expected 'batched' "
+                f"or 'sharded'")
 
 
 def iter_event_chunks(stream: EventStream, chunk_events: int):
@@ -184,11 +207,34 @@ class EMVSStreamEngine:
 
     def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig, traj: Trajectory,
                  opts: EMVSOptions = EMVSOptions(),
-                 stream_cfg: StreamConfig = StreamConfig()):
+                 stream_cfg: StreamConfig = StreamConfig(), *,
+                 mesh=None):
         self.cam = cam
         self.dsi_cfg = dsi_cfg
         self.opts = opts
         self.stream_cfg = stream_cfg
+        if stream_cfg.sweep == "sharded":
+            from repro.distributed.emvs import (
+                make_segment_mesh,
+                segment_axis_size,
+            )
+
+            self.mesh = mesh if mesh is not None else make_segment_mesh()
+            n = segment_axis_size(self.mesh)
+            # shard-stable S buckets: every dispatch's segment axis must
+            # divide the mesh, so round each bucket up to a multiple of n
+            # (deduplicated, still ascending — the compiled-variant bound
+            # only shrinks).
+            self._segment_buckets = tuple(sorted(
+                {-(-b // n) * n for b in stream_cfg.segment_buckets}))
+        else:
+            if mesh is not None:
+                raise ValueError(
+                    "mesh= is only meaningful with "
+                    "StreamConfig(sweep='sharded'); the batched sweep "
+                    "would silently ignore it")
+            self.mesh = None
+            self._segment_buckets = stream_cfg.segment_buckets
         self.aggregator = StreamingAggregator(cam, traj,
                                               stream_cfg.events_per_frame)
         mean_depth = 0.5 * (dsi_cfg.z_min + dsi_cfg.z_max)
@@ -235,7 +281,7 @@ class EMVSStreamEngine:
     def _dispatch_all(self, closed: list[tuple[int, int]]) -> None:
         """Group consecutive same-capacity segments; pad S to a bucket."""
         i = 0
-        max_s = self.stream_cfg.segment_buckets[-1]
+        max_s = self._segment_buckets[-1]
         while i < len(closed):
             cap = bucket_capacity(closed[i][1] - closed[i][0])
             j = i + 1
@@ -247,12 +293,25 @@ class EMVSStreamEngine:
             i = j
 
     def _s_bucket(self, n: int) -> int:
-        for b in self.stream_cfg.segment_buckets:
+        for b in self._segment_buckets:
             if b >= n:
                 return b
         raise AssertionError(f"group of {n} exceeds top segment bucket")
 
+    def _sweep(self, batch) -> tuple[Array, DepthMap]:
+        if self.stream_cfg.sweep == "sharded":
+            from repro.distributed.emvs import process_segments_sharded
+
+            return process_segments_sharded(self.cam, self.dsi_cfg, batch,
+                                            self.opts, mesh=self.mesh)
+        return process_segments_batched(self.cam, self.dsi_cfg, batch,
+                                        self.opts)
+
     def _dispatch(self, segs: list[tuple[int, int]], cap: int) -> None:
+        # _dispatch_all only forms groups from non-empty closed-segment
+        # runs, so an empty dispatch is a planner/grouping bug, not a
+        # stream condition — and pad_segments would reject it anyway.
+        assert segs, "_dispatch requires at least one closed segment"
         s_pad = self._s_bucket(len(segs))
         # padded rows repeat the last real segment: lax.map's body is
         # per-segment independent, so they are pure discarded work
@@ -264,8 +323,7 @@ class EMVSStreamEngine:
         batch = pad_segments(win, shifted, cap)
         # async dispatch: both calls below return with the sweep enqueued,
         # so the caller stages the next batch while this one votes
-        dsis, dms = process_segments_batched(self.cam, self.dsi_cfg, batch,
-                                             self.opts)
+        dsis, dms = self._sweep(batch)
         pcs = depth_maps_to_points(self.cam, dms, SE3(batch.ref_R, batch.ref_t))
         self._inflight.append(
             _InFlight(list(segs), batch.ref_R, batch.ref_t, dsis, dms, pcs))

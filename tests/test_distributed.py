@@ -61,31 +61,61 @@ from repro.core.pipeline import (EMVSOptions, precompute_segment_geometry,
 from repro.core.geometry import SE3
 from repro.events.simulator import SceneConfig, make_scene, make_trajectory, simulate_events
 from repro.events.aggregation import aggregate
-from repro.distributed.emvs import make_emvs_step
+from repro.distributed.emvs import emvs_input_specs, make_emvs_step
 cam = CameraModel()
 scene = make_scene(SceneConfig(points_per_plane=120))
 traj = make_trajectory("simulation_3planes", 20)
 ev = simulate_events(cam, scene, traj, noise_fraction=0.0)
 frames = aggregate(cam, ev, traj, 1024)
-F = (frames.xy.shape[0] // 4) * 4
-frames = jax.tree.map(lambda a: a[:F], frames)
 dsi_cfg = DSIConfig.for_camera(cam, num_planes=16, z_min=0.6, z_max=4.5)
 T_w_ref = SE3(frames.poses.R[0], frames.poses.t[0])
-dsi_ref, dm_ref = process_segment(cam, dsi_cfg, frames, T_w_ref,
-                                  EMVSOptions(formulation="matmul",
-                                              median_filter=False))
+F = int(frames.xy.shape[0])
+# pad F up to a multiple of the data axis with repeats of the last frame:
+# frame_valid zeroes their votes, so no truncation is needed any more
+F_pad = -(-F // 4) * 4
+pad = jax.tree.map(lambda a: np.concatenate(
+    [np.asarray(a)] + [np.asarray(a)[-1:]] * (F_pad - F)), frames)
+frame_valid = jnp.asarray((np.arange(F_pad) < F).astype(np.float32))
 planes = dsi_cfg.planes()
-geoms = precompute_segment_geometry(cam, frames, T_w_ref, planes,
+geoms = precompute_segment_geometry(cam, pad, T_w_ref, planes,
                                     planes[dsi_cfg.num_planes // 2])
 phi = jnp.stack([geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y], axis=-1)
-step = make_emvs_step(cam, dsi_cfg, mesh)
-with mesh:
-    dsi_d, depth, mask, conf = step(frames.xy, frames.valid.astype(jnp.float32),
-                                    geoms.H, phi)
-assert int(jnp.max(jnp.abs(dsi_d.astype(jnp.int32)
-                            - dsi_ref.astype(jnp.int32)))) == 0
-assert bool(jnp.all(mask == dm_ref.mask))
+for voting in ("nearest", "bilinear"):
+    dsi_ref, dm_ref = process_segment(cam, dsi_cfg, frames, T_w_ref,
+                                      EMVSOptions(formulation="matmul",
+                                                  voting=voting,
+                                                  median_filter=False))
+    step = make_emvs_step(cam, dsi_cfg, mesh, mode=voting)
+    with mesh:
+        dsi_d, depth, mask, conf = step(pad.xy, pad.valid.astype(jnp.float32),
+                                        frame_valid, geoms.H, phi)
+    if voting == "nearest":
+        # integral counts + integer psum: exact
+        assert int(jnp.max(jnp.abs(dsi_d.astype(jnp.int32)
+                                    - dsi_ref.astype(jnp.int32)))) == 0
+    else:
+        # fractional bilinear weights stay float32 through the psum
+        # (regression: an integer-narrowed merge truncated them to zero
+        # error ~1); only summation order differs from the reference
+        assert dsi_d.dtype == jnp.float32, dsi_d.dtype
+        err = float(jnp.max(jnp.abs(dsi_d - dsi_ref.astype(jnp.float32))))
+        assert err < 1e-3, err
+    assert bool(jnp.all(mask == dm_ref.mask)), voting
 print("OK distributed_emvs")
+
+# --- 3b. emvs_input_specs match the step signature (dry-run lowering) -----
+specs = emvs_input_specs(dsi_cfg, frames=F_pad, events=int(frames.xy.shape[1]))
+assert list(specs) == ["xy", "valid", "frame_valid", "H", "phi"]
+assert specs["frame_valid"].shape == (F_pad,)
+with mesh:
+    jax.jit(make_emvs_step(cam, dsi_cfg, mesh)).lower(*specs.values())
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+specs3 = emvs_input_specs(dsi_cfg, frames=4, events=64, segments=2)
+assert all(s.shape[0] == 2 for s in specs3.values())
+with mesh3:
+    jax.jit(make_emvs_step(cam, dsi_cfg, mesh3, pod_axis="pod")).lower(
+        *specs3.values())
+print("OK emvs_input_specs")
 
 # --- 4. sharded train step == single-device step --------------------------
 from repro.training.train_step import (TrainOptions, init_train_state,

@@ -187,3 +187,12 @@ def test_pad_segments_masks_and_clamping():
                                   np.asarray(frames.poses.t[jnp.asarray([0, 2])]))
     with pytest.raises(ValueError):
         pad_segments(frames, [(0, 5)], capacity=4)
+
+
+def test_pad_segments_empty_list_raises():
+    """Regression: an empty segment list used to die inside np.stack with
+    an opaque "need at least one array" error; it must be a clear
+    ValueError at the API boundary instead."""
+    frames = _synthetic_frames([0.0, 0.1], events=8)
+    with pytest.raises(ValueError, match="at least one segment"):
+        pad_segments(frames, [], capacity=4)

@@ -1,0 +1,275 @@
+"""Sharded-vs-batched segment-sweep equivalence.
+
+`process_segments_sharded` runs the exact sweep body of
+`process_segments_batched` with the segment axis sharded across mesh
+devices, so the two backends must agree bitwise on the integer/nearest
+datapaths and to float tolerance on bilinear — the same discipline PRs
+1–2 imposed between looped/batched and offline/streaming.
+
+Fast checks (1 device, main process) cover the `sweep=` wiring in
+`run_emvs` and the streaming engine; the real test runs the 12-combo
+grid on a forced-8-device host mesh in ONE subprocess (the dry-run
+isolation rule: the main process must stay at one device), including
+padded frames (uneven segment lengths) and padded segment rows (S not a
+multiple of the mesh).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.dsi import DSIConfig
+from repro.core.pipeline import EMVSOptions, plan_segments, run_emvs
+from repro.serving.emvs_stream import EMVSStreamEngine, StreamConfig
+from test_segment_batching import _assert_results_match, _synthetic_frames
+
+
+def test_run_emvs_rejects_unknown_sweep(cam):
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.5, z_max=3.5)
+    frames = _synthetic_frames([0.0, 0.1, 0.2])
+    with pytest.raises(ValueError, match="unknown sweep backend"):
+        run_emvs(cam, dsi_cfg, frames, EMVSOptions(), sweep="looped")
+
+
+def test_stream_config_rejects_unknown_sweep():
+    with pytest.raises(ValueError, match="unknown sweep backend"):
+        StreamConfig(sweep="magic")
+
+
+def test_mesh_requires_sharded_sweep(cam):
+    """mesh= with the batched sweep would be silently ignored — reject it."""
+    from repro.distributed.emvs import make_segment_mesh
+    from repro.events.simulator import Trajectory
+    from repro.core.geometry import SE3
+    import jax.numpy as jnp
+
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.5, z_max=3.5)
+    frames = _synthetic_frames([0.0, 0.1, 0.2])
+    mesh = make_segment_mesh()
+    with pytest.raises(ValueError, match="only meaningful"):
+        run_emvs(cam, dsi_cfg, frames, EMVSOptions(), mesh=mesh)
+    traj = Trajectory(times=jnp.asarray([0.0, 1.0]),
+                      poses=SE3(jnp.broadcast_to(jnp.eye(3), (2, 3, 3)),
+                                jnp.zeros((2, 3))))
+    with pytest.raises(ValueError, match="only meaningful"):
+        EMVSStreamEngine(cam, dsi_cfg, traj, mesh=mesh)
+
+
+def test_mesh_without_segment_axis_rejected(cam):
+    """A user mesh must name its segment axis 'segments' — otherwise the
+    wiring would die with an opaque KeyError deep inside the sweep."""
+    import jax
+    import jax.numpy as jnp
+    from repro.events.simulator import Trajectory
+    from repro.core.geometry import SE3
+
+    bad = jax.make_mesh((1,), ("segs",))
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.5, z_max=3.5)
+    frames = _synthetic_frames([0.0, 0.04, 0.08, 0.12])
+    with pytest.raises(ValueError, match="'segments' axis"):
+        run_emvs(cam, dsi_cfg, frames,
+                 EMVSOptions(keyframe_dist_frac=0.05),
+                 sweep="sharded", mesh=bad)
+    traj = Trajectory(times=jnp.asarray([0.0, 1.0]),
+                      poses=SE3(jnp.broadcast_to(jnp.eye(3), (2, 3, 3)),
+                                jnp.zeros((2, 3))))
+    with pytest.raises(ValueError, match="'segments' axis"):
+        EMVSStreamEngine(cam, dsi_cfg, traj,
+                         stream_cfg=StreamConfig(sweep="sharded"), mesh=bad)
+
+
+def test_run_emvs_sharded_matches_batched_one_device(cam):
+    """The sweep="sharded" wiring end to end on the (single-device) host
+    mesh: same segments, bitwise-equal nearest DSIs, same clouds."""
+    frames = _synthetic_frames(
+        [0.0, 0.04, 0.08, 0.12, 0.16, 0.20, 0.24, 0.28, 0.32], events=48)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.5, z_max=3.5)
+    opts = EMVSOptions(keyframe_dist_frac=0.05)
+    assert len(plan_segments(frames, dsi_cfg, opts)) >= 2
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    got = run_emvs(cam, dsi_cfg, frames, opts, sweep="sharded")
+    _assert_results_match(got, ref, exact_dsi=True)
+
+
+def test_stream_engine_sharded_one_device(cam, small_scene):
+    """StreamConfig(sweep="sharded") drives dispatches through the sharded
+    backend (single-device mesh) and still reproduces run_emvs bitwise."""
+    from repro.serving.emvs_stream import iter_event_chunks
+
+    ev, traj = small_scene["events"], small_scene["traj"]
+    keep = 6 * 224
+    from repro.events.simulator import EventStream
+
+    ev = EventStream(xy=ev.xy[:keep], t=ev.t[:keep],
+                     polarity=ev.polarity[:keep], valid=ev.valid[:keep])
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.6, z_max=4.5)
+    opts = EMVSOptions(keyframe_dist_frac=0.03)
+    from repro.events.aggregation import aggregate
+
+    frames = aggregate(cam, ev, traj, events_per_frame=224)
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, traj, opts,
+        StreamConfig(events_per_frame=224, sweep="sharded"))
+    # single-device mesh: rounding the S buckets to multiples of 1 is a no-op
+    assert engine._segment_buckets == engine.stream_cfg.segment_buckets
+    for c in iter_event_chunks(ev, 997):
+        engine.push(c)
+    res = engine.flush()
+    _assert_results_match(res, ref, exact_dsi=True)
+
+
+# ---------------------------------------------------------------------------
+# The real equivalence grid: 8 host devices in one subprocess
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")  # subprocess cwd = repo root
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core.camera import CameraModel
+from repro.core.dsi import DSIConfig
+from repro.core.geometry import SE3
+from repro.core.pipeline import (EMVSOptions, pad_segments, plan_segments,
+                                 process_segments_batched, run_emvs)
+from repro.distributed.emvs import (SEGMENT_AXIS, make_segment_mesh,
+                                    process_segments_sharded)
+from repro.events.aggregation import EventFrames
+
+mesh = make_segment_mesh()
+assert mesh.shape[SEGMENT_AXIS] == 8, mesh
+
+# Small sensor keeps the 12-combo grid affordable: the sweep body is the
+# same code whatever the resolution.
+cam = CameraModel(width=64, height=48, fx=60.0, fy=60.0, cx=32.0, cy=24.0)
+dsi_cfg = DSIConfig.for_camera(cam, num_planes=8, z_min=0.6, z_max=4.5)
+
+def synthetic_frames(n, events=48, seed=0):
+    r = np.random.default_rng(seed)
+    xy = np.stack([r.uniform(0, cam.width - 1, (n, events)),
+                   r.uniform(0, cam.height - 1, (n, events))],
+                  axis=-1).astype(np.float32)
+    t = np.zeros((n, 3), np.float32)
+    t[:, 0] = np.linspace(0.0, 0.4, n)
+    return EventFrames(
+        xy=jnp.asarray(xy), valid=jnp.ones((n, events), jnp.float32),
+        t_mid=jnp.arange(n, dtype=jnp.float32),
+        poses=SE3(jnp.broadcast_to(jnp.eye(3, dtype=jnp.float32), (n, 3, 3)),
+                  jnp.asarray(t)))
+
+# --- 1. 12-combo grid on one padded SegmentBatch --------------------------
+# 8 segments alternating 3/4 frames at capacity 4: padded FRAME slots in
+# every other row, S exactly the mesh size.
+lens = [3, 4] * 4
+bounds, start = [], 0
+for L in lens:
+    bounds.append((start, start + L)); start += L
+frames = synthetic_frames(start)
+batch = pad_segments(frames, bounds, capacity=4)
+assert batch.xy.shape[0] == 8
+
+GRID = [(f, v, q)
+        for f in ("scatter", "matmul", "kernel")
+        for v in ("nearest", "bilinear")
+        for q in (False, True)]
+for f, v, q in GRID:
+    opts = EMVSOptions(formulation=f, voting=v, quantized=q,
+                       keyframe_dist_frac=0.05)
+    dsis_b, dms_b = process_segments_batched(cam, dsi_cfg, batch, opts)
+    dsis_s, dms_s = process_segments_sharded(cam, dsi_cfg, batch, opts,
+                                             mesh=mesh)
+    if v == "nearest":
+        np.testing.assert_array_equal(np.asarray(dsis_s), np.asarray(dsis_b))
+        np.testing.assert_array_equal(np.asarray(dms_s.depth),
+                                      np.asarray(dms_b.depth))
+    else:
+        np.testing.assert_allclose(np.asarray(dsis_s, np.float32),
+                                   np.asarray(dsis_b, np.float32), atol=1e-4)
+        m = np.asarray(dms_b.mask)
+        np.testing.assert_allclose(np.asarray(dms_s.depth)[m],
+                                   np.asarray(dms_b.depth)[m], atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(dms_s.mask),
+                                  np.asarray(dms_b.mask))
+    np.testing.assert_allclose(np.asarray(dms_s.confidence),
+                               np.asarray(dms_b.confidence), atol=1e-4)
+    print(f"OK grid {f}/{v}/{'q' if q else 'f'}")
+
+# --- 2. S not divisible by the mesh -> clear error ------------------------
+small = pad_segments(frames, bounds[:3], capacity=4)
+try:
+    process_segments_sharded(cam, dsi_cfg, small, EMVSOptions(), mesh=mesh)
+    raise AssertionError("expected ValueError for S=3 on an 8-way mesh")
+except ValueError as e:
+    assert "multiple" in str(e), e
+print("OK divisibility_error")
+
+# --- 3. run_emvs(sweep='sharded'): padded SEGMENT ROWS --------------------
+# planner yields a segment count that is NOT a multiple of 8, so the
+# sharded path pads S internally and must discard the padded rows.
+opts = EMVSOptions(keyframe_dist_frac=0.05)
+segs = plan_segments(frames, dsi_cfg, opts)
+assert len(segs) % 8 != 0, segs
+ref = run_emvs(cam, dsi_cfg, frames, opts)
+got = run_emvs(cam, dsi_cfg, frames, opts, sweep="sharded", mesh=mesh)
+assert [s.frame_range for s in got.segments] == \
+       [s.frame_range for s in ref.segments]
+for sa, sb in zip(got.segments, ref.segments):
+    np.testing.assert_array_equal(np.asarray(sa.dsi), np.asarray(sb.dsi))
+    np.testing.assert_array_equal(np.asarray(sa.depth_map.mask),
+                                  np.asarray(sb.depth_map.mask))
+    np.testing.assert_array_equal(np.asarray(sa.depth_map.depth),
+                                  np.asarray(sb.depth_map.depth))
+for ca, cb in zip(got.clouds, ref.clouds):
+    np.testing.assert_array_equal(np.asarray(ca.valid), np.asarray(cb.valid))
+print("OK run_emvs_sharded")
+
+# --- 4. streaming engine on the sharded backend ---------------------------
+from repro.events.simulator import (SceneConfig, make_scene, make_trajectory,
+                                    simulate_events)
+from repro.events.aggregation import aggregate
+from repro.serving.emvs_stream import (EMVSStreamEngine, StreamConfig,
+                                       iter_event_chunks)
+scene = make_scene(SceneConfig(name="simulation_3planes", points_per_plane=40))
+traj = make_trajectory("simulation_3planes", 12)
+ev = simulate_events(cam, scene, traj, noise_fraction=0.0)
+e_frame = 160
+frames2 = aggregate(cam, ev, traj, events_per_frame=e_frame)
+opts2 = EMVSOptions(keyframe_dist_frac=0.03)
+ref2 = run_emvs(cam, dsi_cfg, frames2, opts2)
+assert len(ref2.segments) >= 2
+scfg = StreamConfig(events_per_frame=e_frame, segment_buckets=(1, 2, 4),
+                    sweep="sharded")
+engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts2, scfg, mesh=mesh)
+# S buckets rounded up to multiples of the mesh: shard-stable shapes
+assert engine._segment_buckets == (8,), engine._segment_buckets
+for c in iter_event_chunks(ev, 731):
+    engine.push(c)
+res2 = engine.flush()
+assert [s.frame_range for s in res2.segments] == \
+       [s.frame_range for s in ref2.segments]
+for sa, sb in zip(res2.segments, ref2.segments):
+    np.testing.assert_array_equal(np.asarray(sa.dsi), np.asarray(sb.dsi))
+    np.testing.assert_array_equal(np.asarray(sa.depth_map.depth),
+                                  np.asarray(sb.depth_map.depth))
+assert engine.stats["dispatches"] >= 1
+print("OK stream_sharded")
+print("ALL_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_sweep_suite():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=1500, env=env,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "ALL_SHARDED_OK" in r.stdout, (
+        f"STDOUT:\n{r.stdout[-3000:]}\nSTDERR:\n{r.stderr[-5000:]}")

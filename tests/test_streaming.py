@@ -124,10 +124,103 @@ def test_flush_without_events(cam):
     engine = EMVSStreamEngine(cam, dsi_cfg, traj)
     res = engine.flush()
     assert res.segments == [] and res.clouds == []
-    with pytest.raises(RuntimeError):
+    with pytest.raises(RuntimeError, match="push after flush"):
         engine.push(EventStream(xy=jnp.zeros((1, 2)), t=jnp.zeros((1,)),
                                 polarity=jnp.zeros((1,), jnp.int8),
                                 valid=jnp.ones((1,), bool)))
+
+
+# --- poll / dispatch / frame-store semantics ------------------------------
+
+
+def _engine(cam, n_planes=8):
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=n_planes, z_min=0.6,
+                                   z_max=4.5)
+    traj = Trajectory(times=jnp.asarray([0.0, 1.0]),
+                      poses=SE3(jnp.broadcast_to(jnp.eye(3), (2, 3, 3)),
+                                jnp.zeros((2, 3))))
+    return EMVSStreamEngine(cam, dsi_cfg, traj)
+
+
+class _StubArray:
+    """Array stand-in with controllable device-completion state."""
+
+    def __init__(self, a, ready):
+        self._a = np.asarray(a)
+        self.ready = ready
+
+    def is_ready(self):
+        return self.ready
+
+    def block_until_ready(self):
+        self.ready = True
+        return self
+
+    def __getitem__(self, k):
+        return self._a[k]
+
+
+def _stub_inflight(seg, ready):
+    from repro.core.detection import DepthMap
+    from repro.core.pointcloud import PointCloud
+    from repro.serving.emvs_stream import _InFlight
+
+    h, w = 4, 6
+    arr = lambda *s: _StubArray(np.zeros((1,) + s, np.float32), ready)
+    return _InFlight(
+        segs=[seg], ref_R=arr(3, 3), ref_t=arr(3), dsis=arr(2, h, w),
+        dms=DepthMap(depth=arr(h, w), mask=arr(h, w), confidence=arr(h, w)),
+        pcs=PointCloud(points=arr(h * w, 3), weights=arr(h * w),
+                       valid=arr(h * w)))
+
+
+def test_poll_is_nonblocking_and_head_of_line(cam):
+    """poll returns only sweeps the device has completed, in dispatch
+    order: a finished sweep behind an unfinished one is NOT surfaced
+    (head-of-line), and poll never blocks on the unfinished head."""
+    engine = _engine(cam)
+    head = _stub_inflight((0, 2), ready=False)
+    tail = _stub_inflight((2, 4), ready=True)
+    engine._inflight.extend([head, tail])
+    assert engine.poll() == []  # head not device-complete -> nothing
+    assert not head.dms.depth.ready, "poll must not block on the head"
+    head.dms.depth.ready = True
+    out = engine.poll()
+    assert [r.frame_range for r in out] == [(0, 2), (2, 4)]
+    assert not engine._inflight
+    assert engine.poll() == []  # nothing new
+
+
+def test_dispatch_rejects_empty_segment_group(cam):
+    """_dispatch can never see an empty group: _dispatch_all only forms
+    groups from non-empty closed-segment runs, and the guard (plus
+    pad_segments' ValueError underneath) makes the invariant explicit."""
+    engine = _engine(cam)
+    with pytest.raises(AssertionError, match="at least one closed segment"):
+        engine._dispatch([], 4)
+    engine._dispatch_all([])  # no closed segments -> no dispatch, no error
+    assert engine.stats["dispatches"] == 0
+
+
+def test_frame_store_boundaries(cam):
+    from repro.serving.emvs_stream import _FrameStore
+    from test_segment_batching import _synthetic_frames
+
+    store = _FrameStore()
+    store.extend(_synthetic_frames([0.0, 0.1, 0.2, 0.3, 0.4], events=8))
+    assert (store.base, store.end) == (0, 5)
+    win = store.window(1, 4)
+    assert win.xy.shape[0] == 3
+    store.evict_before(2)
+    assert (store.base, store.end) == (2, 5)
+    with pytest.raises(IndexError, match="outside retained"):
+        store.window(1, 4)  # lo evicted
+    with pytest.raises(IndexError, match="outside retained"):
+        store.window(3, 6)  # hi beyond newest
+    with pytest.raises(IndexError):
+        store.window(3, 3)  # empty ranges are never valid
+    np.testing.assert_array_equal(np.asarray(store.window(2, 5).t_mid),
+                                  [2.0, 3.0, 4.0])
 
 
 # --- property tests -------------------------------------------------------
