@@ -13,6 +13,16 @@ the number of compiled sweep variants (must stay at
 |segment_buckets| x |capacities| — the double-buffered dispatch pads
 both the frame and the segment axes to fixed sizes).
 
+Second axis: the POSE-LAG SWEEP. The realistic system receives poses
+from a tracker running *behind* the event front; the engine's
+pose-gated mode stalls frames past the pose-lag watermark until their
+bracketing pose chunk arrives. The sweep streams the same sequence with
+the pose stream lagging the event front by several delays and reports
+first-depth latency and peak stall-queue depth per lag (results must
+stay bit-identical to offline `run_emvs` at every lag). Both tables are
+emitted into `BENCH_emvs.json` ("streaming_latency" section, with a
+"pose_lag_sweep" list) for CI artifact tracking.
+
 Both paths are measured cold (fresh jit caches): that is what a newly
 started sensor pipeline pays.
 
@@ -46,6 +56,7 @@ from repro.events.simulator import (
     make_scene,
     make_trajectory,
     simulate_events,
+    slice_trajectory,
 )
 from repro.serving.emvs_stream import (
     EMVSStreamEngine,
@@ -68,6 +79,37 @@ def build_sequence(dry_run: bool):
     ev = simulate_events(cam, scene, traj, noise_fraction=0.02, seed=0)
     dsi_cfg = DSIConfig.for_camera(cam, num_planes=planes, z_min=0.6, z_max=4.5)
     return cam, traj, ev, e_frame, dsi_cfg
+
+
+def stream_with_pose_lag(cam, dsi_cfg, traj, ev, opts, scfg,
+                         lag_s: float, chunk_events: int):
+    """Stream events with the pose stream trailing the event front by
+    `lag_s` seconds (tracker model). Returns (result, first-depth
+    latency, end-to-end time, engine stats)."""
+    engine = EMVSStreamEngine(cam, dsi_cfg, None, opts, scfg)
+    pose_t = np.asarray(traj.times)
+    sent = 0
+    first = None
+    t0 = time.perf_counter()
+    for chunk in iter_event_chunks(ev, chunk_events):
+        if engine.push(chunk) and first is None:
+            first = time.perf_counter() - t0
+        front = float(np.asarray(chunk.t)[-1]) - lag_s
+        hi = int(np.searchsorted(pose_t, front, side="right"))
+        if hi > sent:
+            got = engine.push_poses(slice_trajectory(traj, sent, hi))
+            sent = hi
+            if got and first is None:
+                first = time.perf_counter() - t0
+    # tracker drains after the sensor: deliver the rest, close the stream
+    if sent < pose_t.shape[0]:
+        got = engine.push_poses(slice_trajectory(traj, sent, pose_t.shape[0]))
+        if got and first is None:
+            first = time.perf_counter() - t0
+    engine.finalize_poses()
+    res = engine.flush()
+    t_total = time.perf_counter() - t0
+    return res, (t_total if first is None else first), t_total, engine.stats
 
 
 def main() -> None:
@@ -144,6 +186,41 @@ def main() -> None:
         f"end-to-end {t_offline:.2f}s")
     print("OK: first depth map arrives before the offline path finishes")
 
+    # --- pose-lag sweep: tracker trailing the event front -----------------
+    duration = float(np.asarray(ev.t)[-1]) - float(np.asarray(ev.t)[0])
+    lags = [0.0, round(0.1 * duration, 4), round(0.3 * duration, 4)]
+    print(f"\npose-lag sweep (sequence duration {duration:.2f}s):")
+    print(f"{'lag s':<10}{'first depth s':>14}{'end-to-end s':>14}"
+          f"{'max stalled':>12}{'watermark':>12}")
+    pose_lag_rows = []
+    for lag in lags:
+        jax.clear_caches()
+        lag_res, lag_first, lag_total, stats = stream_with_pose_lag(
+            cam, dsi_cfg, traj, ev, opts, scfg, lag,
+            args.chunk_frames * e_frame)
+        assert [s.frame_range for s in lag_res.segments] == \
+            [s.frame_range for s in ref.segments], \
+            f"pose lag {lag}s changed segment boundaries"
+        lag_worst = 0.0
+        for sa, sb in zip(lag_res.segments, ref.segments):
+            lag_worst = max(lag_worst, float(np.abs(
+                np.asarray(sa.dsi, np.float32)
+                - np.asarray(sb.dsi, np.float32)).max()))
+        assert lag_worst == 0.0, (
+            f"pose lag {lag}s must not change the reconstruction "
+            f"(max DSI delta {lag_worst})")
+        print(f"{lag:<10.3f}{lag_first:>14.2f}{lag_total:>14.2f}"
+              f"{stats['max_stalled']:>12d}{stats['pose_watermark']:>12.3f}")
+        pose_lag_rows.append({
+            "lag_s": lag,
+            "first_depth_latency_s": round(lag_first, 3),
+            "end_to_end_s": round(lag_total, 3),
+            "max_stalled_frames": int(stats["max_stalled"]),
+            "pose_watermark": round(float(stats["pose_watermark"]), 4),
+            "pose_chunks": int(stats["pose_chunks"]),
+        })
+    print("OK: reconstruction is pose-lag invariant (bitwise)")
+
     path = update_bench_json("streaming_latency", {
         "dry_run": bool(args.dry_run),
         "events": n_events,
@@ -153,6 +230,7 @@ def main() -> None:
         "first_depth_latency_s": round(first, 3),
         "first_depth_speedup": round(t_offline / first, 3),
         "compiled_variants": int(variants),
+        "pose_lag_sweep": pose_lag_rows,
     }, path=args.json_out)
     print(f"wrote {path}")
 

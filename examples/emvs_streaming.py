@@ -10,12 +10,20 @@ default nearest/integer datapath.
 
     PYTHONPATH=src python examples/emvs_streaming.py \
         [--scene simulation_3walls] [--chunk-frames 2] [--sweep sharded] \
-        [--out /tmp/emvs_stream.npz]
+        [--pose-lag 0.1] [--out /tmp/emvs_stream.npz]
 
 `--sweep sharded` dispatches each closed-segment bucket through
 `repro.distributed.emvs.process_segments_sharded` (segment axis sharded
 over all local devices) instead of the serial `lax.map` sweep; results
 stay bit-identical on the default nearest/integer datapath.
+
+`--pose-lag SECONDS` switches the pose source from the fully-known
+`Trajectory` oracle to the streamed mode: pose chunks are pushed via
+`engine.push_poses` lagging the event front by the given delay (a
+tracker running behind the sensor), frames past the pose-lag watermark
+stall until their bracketing poses arrive, and `finalize_poses` closes
+the pose stream before the flush. The reconstruction stays bit-identical
+to the oracle mode — only the latency profile changes.
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ from repro.core.pointcloud import concatenate, radius_outlier_filter
 from repro.events.aggregation import EVENTS_PER_FRAME, aggregate
 from repro.events.simulator import (
     SceneConfig, absrel, ground_truth_depth, make_scene, make_trajectory,
-    simulate_events,
+    simulate_events, slice_trajectory,
 )
 from repro.serving.emvs_stream import (
     EMVSStreamEngine, StreamConfig, iter_event_chunks,
@@ -51,6 +59,9 @@ def main() -> None:
     ap.add_argument("--sweep", default="batched",
                     choices=["batched", "sharded"],
                     help="segment-sweep backend (see StreamConfig.sweep)")
+    ap.add_argument("--pose-lag", type=float, default=None,
+                    help="stream poses too, lagging the event front by this "
+                         "many seconds (default: fully-known pose oracle)")
     ap.add_argument("--out", default="/tmp/emvs_stream.npz")
     args = ap.parse_args()
 
@@ -65,8 +76,9 @@ def main() -> None:
     print(f"scene={args.scene}: {int(events.valid.sum())} events, "
           f"DSI {dsi_cfg.shape}, chunk={args.chunk_frames} frame(s)")
 
-    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts,
-                              StreamConfig(sweep=args.sweep))
+    pose_gated = args.pose_lag is not None
+    engine = EMVSStreamEngine(cam, dsi_cfg, None if pose_gated else traj,
+                              opts, StreamConfig(sweep=args.sweep))
     t0 = time.time()
 
     def report(seg, when):
@@ -76,10 +88,37 @@ def main() -> None:
         print(f"  t={when:6.1f}s  keyframe {seg.frame_range}: "
               f"AbsRel {err:.4f}  {px:6d} px")
 
-    print("streaming...")
+    pose_times = np.asarray(traj.times)
+    pose_sent = 0  # pose samples already pushed (pose-gated mode)
+
+    def push_poses_behind(event_front: float) -> list:
+        """Tracker model: poses are available up to event_front - lag."""
+        nonlocal pose_sent
+        hi = int(np.searchsorted(pose_times, event_front - args.pose_lag,
+                                 side="right"))
+        if hi <= pose_sent:
+            return []
+        lo, pose_sent = pose_sent, hi
+        return engine.push_poses(slice_trajectory(traj, lo, hi))
+
+    print("streaming..." + (f" (pose stream lagging {args.pose_lag}s)"
+                            if pose_gated else ""))
     for chunk in iter_event_chunks(events, args.chunk_frames * EVENTS_PER_FRAME):
         for seg in engine.push(chunk):
             report(seg, time.time() - t0)
+        if pose_gated:
+            for seg in push_poses_behind(float(np.asarray(chunk.t)[-1])):
+                report(seg, time.time() - t0)
+    if pose_gated:
+        # tracker drains: deliver the remaining poses, then close the stream
+        # (segments completed by the drain burst are reported here, not lost)
+        for seg in push_poses_behind(float("inf")):
+            report(seg, time.time() - t0)
+        for seg in engine.finalize_poses():
+            report(seg, time.time() - t0)
+        print(f"pose stream done: watermark t="
+              f"{engine.stats['pose_watermark']:.3f}, "
+              f"max stall {engine.stats['max_stalled']} frame(s)")
     print("end of stream -> flush")
     known = {s.frame_range for s in engine.result().segments}
     res = engine.flush()

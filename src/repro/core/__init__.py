@@ -1,5 +1,22 @@
-"""EMVS core: the paper's algorithm as a composable JAX module."""
+"""EMVS core: the paper's algorithm as a composable JAX module.
+
+`EMVSOptions` / `EMVSResult` / `run_emvs` are re-exported lazily:
+`repro.core.pipeline` imports `repro.events.aggregation`, which imports
+`repro.core.camera` — eager re-export here turned that into a circular
+import whenever an `repro.events` module was the first one loaded.
+"""
 
 from repro.core.camera import CameraModel  # noqa: F401
 from repro.core.dsi import DSIConfig  # noqa: F401
-from repro.core.pipeline import EMVSOptions, EMVSResult, run_emvs  # noqa: F401
+
+_PIPELINE_EXPORTS = ("EMVSOptions", "EMVSResult", "run_emvs")
+
+__all__ = ["CameraModel", "DSIConfig", *_PIPELINE_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _PIPELINE_EXPORTS:
+        from repro.core import pipeline
+
+        return getattr(pipeline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

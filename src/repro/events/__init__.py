@@ -1,2 +1,5 @@
 """Event data pipeline: simulator, streaming correction, incremental
-aggregation (`StreamingAggregator` carries partial frames across chunks)."""
+aggregation (`StreamingAggregator` carries partial frames across chunks),
+and the streamed trajectory (`trajectory_stream.TrajectoryBuffer`: pose
+chunks in, pose-lag watermark out; frames past the watermark stall until
+their bracketing poses arrive — never silently extrapolated)."""

@@ -13,18 +13,54 @@ pushes, exactly as the device-side A stage holds a partial frame in its
 buffer while waiting for more events. The offline `aggregate` is one big
 push plus a flush, so the stream's tail is emitted as a final padded
 frame instead of being silently dropped.
+
+Poses come from either a fully-known `Trajectory` (the offline oracle)
+or a `TrajectoryBuffer` receiving the tracker's pose stream in chunks
+(`repro.events.trajectory_stream`). In the streamed (pose-gated) mode a
+completed frame whose mid-time lies beyond the buffer's pose-lag
+watermark is *stalled* — held unposed until the bracketing pose chunk
+arrives — and then released bitwise-identically posed, so any
+interleaving of event and pose chunks yields the same frames. Queries
+outside the received span follow the `pose_extrapolation` policy
+("warn" by default: clamp + `PoseExtrapolationWarning`; "raise";
+"clamp" restores the seed's silent freeze and exists only for
+compatibility).
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.camera import CameraModel, undistort_events
-from repro.core.geometry import SE3, interpolate_pose
+from repro.core.geometry import SE3
 from repro.events.simulator import EventStream, Trajectory
+from repro.events.trajectory_stream import (
+    POSE_EXTRAPOLATION_POLICIES,
+    PoseExtrapolationError,
+    PoseExtrapolationWarning,
+    PoseStallError,
+    TrajectoryBuffer,
+    enforce_pose_span,
+    pose_at_times,
+)
+
+__all__ = [
+    "EVENTS_PER_FRAME",
+    "PARKED_COORD",
+    "EventFrames",
+    "PoseExtrapolationError",
+    "PoseExtrapolationWarning",
+    "PoseStallError",
+    "StreamingAggregator",
+    "TrajectoryBuffer",
+    "aggregate",
+    "concat_event_frames",
+    "empty_event_frames",
+    "pose_at_times",
+]
 
 Array = jax.Array
 
@@ -70,21 +106,12 @@ def concat_event_frames(parts: list[EventFrames]) -> EventFrames:
                                                    axis=0), *parts)
 
 
-def pose_at_times(traj: Trajectory, t_query: Array) -> SE3:
-    """Interpolate trajectory poses at query times (vectorized)."""
-    # locate bracketing samples
-    idx = jnp.clip(jnp.searchsorted(traj.times, t_query, side="right") - 1,
-                   0, traj.times.shape[0] - 2)
-    t0, t1 = traj.times[idx], traj.times[idx + 1]
-    frac = jnp.clip((t_query - t0) / jnp.maximum(t1 - t0, 1e-9), 0.0, 1.0)
+class _StalledFrame(NamedTuple):
+    """A completed frame waiting for its bracketing pose samples."""
 
-    def interp_one(i, f):
-        p0 = SE3(traj.poses.R[i], traj.poses.t[i])
-        p1 = SE3(traj.poses.R[i + 1], traj.poses.t[i + 1])
-        return interpolate_pose(p0, p1, f)
-
-    poses = jax.vmap(interp_one)(idx, frac)
-    return poses
+    xy: np.ndarray  # (E, 2)
+    valid: np.ndarray  # (E,)
+    t_mid: float
 
 
 class StreamingAggregator:
@@ -99,23 +126,73 @@ class StreamingAggregator:
     Chunk boundaries never change the emitted frames: any chunking of the
     same stream produces bitwise-identical EventFrames (the streaming
     engine's offline-equivalence tests lean on exactly this).
+
+    Pose source (`traj`):
+      * a `Trajectory` — the offline oracle; every completed frame is
+        posed immediately. Frame mid-times outside the trajectory span
+        follow `pose_extrapolation` ("warn" clamps with
+        `PoseExtrapolationWarning`; "raise" refuses; "clamp" is the
+        seed's silent freeze, opt-in only).
+      * a `TrajectoryBuffer` — the streamed tracker. Completed frames
+        whose `t_mid` is not yet *strictly below* the buffer's watermark
+        stall (see `stalled_frames`) and are released FIFO by
+        `push_poses` / `finalize_poses` once the bracketing samples
+        arrive; the strict inequality makes the released pose
+        bit-identical to interpolating against the full trajectory, for
+        any interleaving of event and pose chunks. `finalize_poses`
+        declares the pose stream over: remaining frames release through
+        the `pose_extrapolation` policy (they can only be beyond-span).
     """
 
-    def __init__(self, cam: CameraModel, traj: Trajectory,
-                 events_per_frame: int = EVENTS_PER_FRAME):
+    def __init__(self, cam: CameraModel, traj: Trajectory | TrajectoryBuffer,
+                 events_per_frame: int = EVENTS_PER_FRAME, *,
+                 pose_extrapolation: str = "warn"):
         if events_per_frame < 1:
             raise ValueError(f"events_per_frame must be >= 1, got {events_per_frame}")
+        if pose_extrapolation not in POSE_EXTRAPOLATION_POLICIES:
+            raise ValueError(
+                f"unknown pose_extrapolation policy {pose_extrapolation!r}: "
+                f"expected one of {POSE_EXTRAPOLATION_POLICIES}")
         self.cam = cam
         self.traj = traj
+        self.pose_extrapolation = pose_extrapolation
+        self._gated = isinstance(traj, TrajectoryBuffer)
+        # one host copy of the oracle's sample times for span checks
+        self._traj_times_host = (None if self._gated
+                                 else np.asarray(traj.times, np.float32))
         self.events_per_frame = int(events_per_frame)
         self._rem_xy = np.zeros((0, 2), np.float32)
         self._rem_t = np.zeros((0,), np.float32)
         self._rem_valid = np.zeros((0,), bool)
+        self._stalled: deque[_StalledFrame] = deque()
+        self._pose_final = False
 
     @property
     def pending_events(self) -> int:
         """Events buffered toward the next (incomplete) frame."""
         return self._rem_xy.shape[0]
+
+    @property
+    def pose_gated(self) -> bool:
+        """True when the pose source is a streamed `TrajectoryBuffer`."""
+        return self._gated
+
+    @property
+    def stalled_frames(self) -> int:
+        """Completed frames held back waiting for pose chunks."""
+        return len(self._stalled)
+
+    @property
+    def oldest_stalled_t(self) -> float:
+        """Mid-time of the oldest stalled frame (+inf if none)."""
+        return self._stalled[0].t_mid if self._stalled else float("inf")
+
+    @property
+    def pose_watermark(self) -> float:
+        """Latest safely interpolable pose time received so far."""
+        if self._gated:
+            return self.traj.watermark
+        return float(self._traj_times_host[-1])
 
     def push(self, chunk: EventStream) -> EventFrames:
         """Ingest a chunk (sorted, contiguous with prior pushes) of events."""
@@ -131,15 +208,42 @@ class StreamingAggregator:
             xy[n_keep:], t[n_keep:], valid[n_keep:])
         return self._emit(xy[:n_keep], t[:n_keep], valid[:n_keep], n_frames)
 
+    def push_poses(self, chunk: Trajectory) -> EventFrames:
+        """Feed one pose chunk to the streamed trajectory; returns the
+        stalled frames the advanced watermark releases (possibly none)."""
+        if not self._gated:
+            raise RuntimeError(
+                "push_poses requires a TrajectoryBuffer pose source; this "
+                "aggregator was built with a fully-known Trajectory oracle")
+        self.traj.push(chunk)
+        return self._release()
+
+    def finalize_poses(self) -> EventFrames:
+        """Declare the pose stream complete and release every stalled frame.
+
+        Frames at or beyond the final watermark can no longer gain a
+        bracketing sample, so they release through the
+        `pose_extrapolation` policy (warn-clamp or raise)."""
+        if not self._gated:
+            raise RuntimeError(
+                "finalize_poses requires a TrajectoryBuffer pose source; "
+                "a Trajectory oracle is always complete")
+        self._pose_final = True
+        return self._release()
+
     def flush(self) -> EventFrames:
-        """Emit the buffered tail as one padded frame (empty if no tail)."""
+        """Emit the buffered tail as one padded frame (empty if no tail).
+
+        In pose-gated mode the tail frame joins the stall queue like any
+        other frame; the returned EventFrames contain only what the
+        current watermark releases (check `stalled_frames` afterwards)."""
         e = self.events_per_frame
         n_rem = self._rem_xy.shape[0]
         if n_rem == 0:
-            return empty_event_frames(e)
+            return self._release() if self._gated else empty_event_frames(e)
         # t_mid from the REAL tail events only — the padding exists to fill
         # the frame shape and must not drag the pose toward the last event
-        t_mid = jnp.median(jnp.asarray(self._rem_t))[None]
+        t_mid = np.asarray(np.median(self._rem_t), np.float32).reshape(1)
         pad = e - n_rem
         xy = np.concatenate(
             [self._rem_xy, np.full((pad, 2), PARKED_COORD, np.float32)])
@@ -152,21 +256,82 @@ class StreamingAggregator:
         return self._emit(xy, t, valid, 1, t_mid=t_mid)
 
     def _emit(self, xy: np.ndarray, t: np.ndarray, valid: np.ndarray,
-              n_frames: int, t_mid: Array | None = None) -> EventFrames:
+              n_frames: int, t_mid: np.ndarray | None = None) -> EventFrames:
         e = self.events_per_frame
         if n_frames == 0:
-            return empty_event_frames(e)
+            return self._release() if self._gated else empty_event_frames(e)
         t_f = t.reshape(n_frames, e)
         if t_mid is None:
-            t_mid = jnp.median(jnp.asarray(t_f), axis=1)
+            # host median: frames stay on the host (numpy) end to end — the
+            # consumers (pad_segments, the streaming engine's frame store)
+            # stage host-side, so a device round-trip per push would be
+            # pure waste. np.median matches jnp.median bitwise on float32.
+            t_mid = np.median(t_f, axis=1)
+        t_mid = np.asarray(t_mid, np.float32)
+        xy_f = xy.reshape(n_frames, e, 2)
+        valid_f = valid.reshape(n_frames, e)
+        if self._gated:
+            for k in range(n_frames):
+                self._stalled.append(
+                    _StalledFrame(xy_f[k], valid_f[k], float(t_mid[k])))
+            return self._release()
+        enforce_pose_span(self._traj_times_host, t_mid,
+                          self.pose_extrapolation, context="frame mid-times")
         poses = pose_at_times(self.traj, t_mid)
-        # frames stay on the host (numpy): the consumers — pad_segments and
-        # the streaming engine's frame store — stage host-side, so an eager
-        # device round-trip per emitted frame would be pure waste
         return EventFrames(
-            xy=xy.reshape(n_frames, e, 2),
-            valid=valid.reshape(n_frames, e),
-            t_mid=np.asarray(t_mid, np.float32),
+            xy=xy_f,
+            valid=valid_f,
+            t_mid=t_mid,
+            poses=SE3(np.asarray(poses.R, np.float32),
+                      np.asarray(poses.t, np.float32)),
+        )
+
+    def _release(self) -> EventFrames:
+        """Pose and emit the FIFO prefix of stalled frames the watermark
+        covers (everything, once the pose stream is finalized)."""
+        e = self.events_per_frame
+        if not self._stalled:
+            return empty_event_frames(e)
+        buf: TrajectoryBuffer = self.traj
+        if buf.num_samples < 2:
+            if self._pose_final:
+                raise PoseExtrapolationError(
+                    f"pose stream finalized with {buf.num_samples} sample(s) "
+                    f"received; {len(self._stalled)} stalled frame(s) can "
+                    f"never be posed")
+            return empty_event_frames(e)
+        if self._pose_final:
+            take = len(self._stalled)
+        else:
+            # strictly below the watermark: the bracketing interval can no
+            # longer change, so the interpolated pose is bit-identical to
+            # the one the full trajectory will eventually give
+            wm = buf.watermark
+            take = 0
+            while take < len(self._stalled) and self._stalled[take].t_mid < wm:
+                take += 1
+        if take == 0:
+            return empty_event_frames(e)
+        frames = [self._stalled.popleft() for _ in range(take)]
+        t_mid = np.asarray([f.t_mid for f in frames], np.float32)
+        times = buf.times
+        n_s = times.shape[0]
+        enforce_pose_span(times, t_mid, self.pose_extrapolation,
+                          context="stalled frame mid-times")
+        # stage only the bracketing slice of the pose history: released
+        # t_mid are ascending (FIFO over a sorted event stream), and
+        # searchsorted over a slice containing every bracket returns the
+        # same intervals — so the pose stays bitwise identical while an
+        # unbounded stream no longer re-transfers its whole past
+        lo = int(np.clip(np.searchsorted(times, t_mid[0], side="right") - 1,
+                         0, n_s - 2))
+        hi = max(min(n_s, int(np.searchsorted(times, t_mid[-1],
+                                              side="right")) + 1), lo + 2)
+        poses = pose_at_times(buf.trajectory(lo, hi), t_mid)
+        return EventFrames(
+            xy=np.stack([f.xy for f in frames]),
+            valid=np.stack([f.valid for f in frames]),
+            t_mid=t_mid,
             poses=SE3(np.asarray(poses.R, np.float32),
                       np.asarray(poses.t, np.float32)),
         )
@@ -174,7 +339,8 @@ class StreamingAggregator:
 
 def aggregate(cam: CameraModel, stream: EventStream, traj: Trajectory,
               events_per_frame: int = EVENTS_PER_FRAME,
-              keep_tail: bool = True) -> EventFrames:
+              keep_tail: bool = True, *,
+              pose_extrapolation: str = "warn") -> EventFrames:
     """Slice the (sorted) stream into frames of `events_per_frame`.
 
     One-big-chunk push through `StreamingAggregator`, so streaming and
@@ -182,8 +348,15 @@ def aggregate(cam: CameraModel, stream: EventStream, traj: Trajectory,
     the trailing partial frame is flushed as a final padded frame; with
     `keep_tail=False` it is dropped (the seed's behavior — a device-side
     partial frame that never saw its remaining events).
+
+    Frame mid-times outside the trajectory span no longer freeze the
+    pose silently: the default `pose_extrapolation="warn"` keeps the
+    clamped numerics but emits `PoseExtrapolationWarning`; "raise"
+    refuses with `PoseExtrapolationError`; "clamp" restores the seed's
+    silent behavior for callers that explicitly want it.
     """
-    agg = StreamingAggregator(cam, traj, events_per_frame)
+    agg = StreamingAggregator(cam, traj, events_per_frame,
+                              pose_extrapolation=pose_extrapolation)
     full = agg.push(stream)
     if not keep_tail:
         return full

@@ -42,6 +42,33 @@ class Trajectory(NamedTuple):
     poses: SE3  # batched (F, 3, 3), (F, 3): T_w_cam
 
 
+def slice_trajectory(traj: Trajectory, lo: int, hi: int) -> Trajectory:
+    """Samples [lo, hi) of a trajectory, poses included.
+
+    The building block for replaying a tracker feed: pair it with a
+    cursor over `traj.times` (e.g. `np.searchsorted(times, event_front -
+    lag)`) to push exactly the poses a lagging tracker would have
+    delivered by now.
+    """
+    return Trajectory(times=traj.times[lo:hi],
+                      poses=SE3(traj.poses.R[lo:hi], traj.poses.t[lo:hi]))
+
+
+def iter_trajectory_chunks(traj: Trajectory, chunk_poses: int):
+    """Split a trajectory into contiguous chunks of `chunk_poses` samples.
+
+    The pose-stream analogue of `iter_event_chunks`: feeding the chunks
+    to `TrajectoryBuffer.push` (or `EMVSStreamEngine.push_poses`) in
+    order reconstructs the trajectory exactly, so tests and benchmarks
+    can replay a tracker that delivers poses in bursts.
+    """
+    if chunk_poses < 1:
+        raise ValueError(f"chunk_poses must be >= 1, got {chunk_poses}")
+    n = int(traj.times.shape[0])
+    for i in range(0, n, chunk_poses):
+        yield slice_trajectory(traj, i, min(i + chunk_poses, n))
+
+
 @dataclasses.dataclass(frozen=True)
 class SceneConfig:
     name: str = "simulation_3planes"

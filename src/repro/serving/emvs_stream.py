@@ -39,10 +39,24 @@ every S bucket up to a multiple of the mesh's segment-axis size, so
 dispatch shapes stay shard-stable (and the compiled-variant bound
 holds) over an unbounded stream.
 
-Poses come from a `Trajectory` queried at frame mid-times, i.e. the pose
-source (a VIO/SLAM tracker in the paper's system) is assumed queryable
-slightly behind the event front; streaming the trajectory itself in
-chunks is future work.
+Poses arrive either from a fully-known `Trajectory` oracle (offline
+replay) or — the realistic mode — as a chunked stream from the tracker
+via `push_poses`, mirroring `push` for events. In the streamed mode the
+engine's aggregator holds a `TrajectoryBuffer` with a monotonically
+advancing **pose-lag watermark**: the latest time at which pose
+interpolation is bracketed by received samples. A completed event frame
+whose mid-time is not yet strictly below the watermark *stalls* (the
+stall queue sits upstream of the frame store, so planner indices and
+window eviction never see out-of-order frames) and is released
+bitwise-identically posed once the bracketing pose chunk lands — so ANY
+interleaving of event and pose chunks reproduces the offline result,
+and no code path silently extrapolates a pose beyond the received
+trajectory. `finalize_poses` declares the tracker done (remaining
+stalled frames release under `StreamConfig.pose_extrapolation`:
+warn-clamp by default, raise on strict pipelines); `flush` with poses
+still missing raises `PoseStallError` naming the stalled frame count
+and the watermark. `stats` tracks the stall queue depth and watermark
+("stalled_frames", "max_stalled", "pose_chunks", "pose_watermark").
 """
 from __future__ import annotations
 
@@ -73,6 +87,11 @@ from repro.events.aggregation import (
     StreamingAggregator,
 )
 from repro.events.simulator import EventStream, Trajectory
+from repro.events.trajectory_stream import (
+    POSE_EXTRAPOLATION_POLICIES,
+    PoseStallError,
+    TrajectoryBuffer,
+)
 
 Array = jax.Array
 
@@ -98,6 +117,12 @@ class StreamConfig:
     # segment-axis size, keeping dispatch shapes shard-stable over an
     # unbounded stream.
     sweep: str = "batched"
+    # Policy for frame mid-times outside the received trajectory span
+    # (only reachable at the stream edges): "warn" clamps to the span
+    # endpoint with PoseExtrapolationWarning, "raise" refuses with
+    # PoseExtrapolationError, "clamp" is the seed's silent freeze (kept
+    # for explicit opt-in only).
+    pose_extrapolation: str = "warn"
 
     def __post_init__(self):
         if not self.segment_buckets:
@@ -112,6 +137,11 @@ class StreamConfig:
             raise ValueError(
                 f"unknown sweep backend {self.sweep!r}: expected 'batched' "
                 f"or 'sharded'")
+        if self.pose_extrapolation not in POSE_EXTRAPOLATION_POLICIES:
+            raise ValueError(
+                f"unknown pose_extrapolation policy "
+                f"{self.pose_extrapolation!r}: expected one of "
+                f"{POSE_EXTRAPOLATION_POLICIES}")
 
 
 def iter_event_chunks(stream: EventStream, chunk_events: int):
@@ -197,15 +227,24 @@ class _InFlight(NamedTuple):
 class EMVSStreamEngine:
     """Online EMVS: push event chunks, harvest per-keyframe depth maps.
 
-    Usage:
+    Usage (pose oracle — offline replay with a fully-known trajectory):
         engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts)
         for chunk in iter_event_chunks(stream, 4096):
             for seg in engine.push(chunk):   # results ready so far
                 ...
         result = engine.flush()              # drain; same type as run_emvs
+
+    Usage (streamed trajectory — poses arrive in chunks, like events):
+        engine = EMVSStreamEngine(cam, dsi_cfg, None, opts)
+        for ev_chunk, pose_chunk in tracker_feed():
+            engine.push(ev_chunk)            # frames past the pose-lag
+            engine.push_poses(pose_chunk)    # watermark stall until here
+        engine.finalize_poses()              # tracker done
+        result = engine.flush()
     """
 
-    def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig, traj: Trajectory,
+    def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig,
+                 traj: Trajectory | TrajectoryBuffer | None,
                  opts: EMVSOptions = EMVSOptions(),
                  stream_cfg: StreamConfig = StreamConfig(), *,
                  mesh=None):
@@ -235,8 +274,15 @@ class EMVSStreamEngine:
                     "would silently ignore it")
             self.mesh = None
             self._segment_buckets = stream_cfg.segment_buckets
-        self.aggregator = StreamingAggregator(cam, traj,
-                                              stream_cfg.events_per_frame)
+        # traj=None: pose-gated mode with a fresh buffer the caller feeds
+        # via push_poses; an existing TrajectoryBuffer (possibly pre-filled)
+        # is used as-is; a Trajectory is the offline oracle.
+        if traj is None:
+            traj = TrajectoryBuffer()
+        self.pose_gated = isinstance(traj, TrajectoryBuffer)
+        self.aggregator = StreamingAggregator(
+            cam, traj, stream_cfg.events_per_frame,
+            pose_extrapolation=stream_cfg.pose_extrapolation)
         mean_depth = 0.5 * (dsi_cfg.z_min + dsi_cfg.z_max)
         # min_frames=2 is plan_segments' parallax filter, applied online.
         self.planner = SegmentPlanner(mean_depth * opts.keyframe_dist_frac,
@@ -246,19 +292,69 @@ class EMVSStreamEngine:
         self._fresh: list[SegmentResult] = []  # harvested, not yet polled
         self._done: dict[tuple[int, int], tuple[SegmentResult, PointCloud]] = {}
         self._flushed = False
+        self._tail_flushed = False  # aggregator tail emitted (flush began)
         self.stats = {"chunks": 0, "frames": 0, "segments": 0,
-                      "dispatches": 0, "padded_segments": 0}
+                      "dispatches": 0, "padded_segments": 0,
+                      "pose_chunks": 0, "stalled_frames": 0, "max_stalled": 0,
+                      "pose_watermark": self.aggregator.pose_watermark}
 
     # --- ingest -----------------------------------------------------------
 
     def push(self, chunk: EventStream) -> list[SegmentResult]:
         """Feed one event chunk; returns segment results that became ready
-        (without blocking — completed sweeps only)."""
-        if self._flushed:
-            raise RuntimeError("push after flush: the engine is drained")
+        (without blocking — completed sweeps only). In pose-gated mode,
+        frames whose mid-time lies past the pose watermark stall inside
+        the aggregator and surface on a later `push_poses`."""
+        if self._flushed or self._tail_flushed:
+            # once flush() has consumed the aggregator's tail remainder —
+            # including a flush that then raised PoseStallError — more
+            # events would land AFTER a padded mid-stream tail frame and
+            # silently shift every later frame boundary
+            raise RuntimeError(
+                "push after flush: the event tail was already emitted "
+                "(only push_poses / finalize_poses / flush may follow)")
         self.stats["chunks"] += 1
         self._ingest(self.aggregator.push(chunk))
+        self._track_stall()
         return self.poll()
+
+    def push_poses(self, chunk: Trajectory) -> list[SegmentResult]:
+        """Feed one pose chunk from the tracker; stalled frames the
+        advanced watermark now covers are released (bitwise-identically
+        posed), planned, and dispatched. Returns results that became
+        ready, exactly like `push`."""
+        if self._flushed:
+            raise RuntimeError("push_poses after flush: the engine is drained")
+        if not self.pose_gated:
+            raise RuntimeError(
+                "push_poses requires a pose-gated engine: construct with "
+                "traj=None (or a TrajectoryBuffer), not a Trajectory oracle")
+        self.stats["pose_chunks"] += 1
+        self._ingest(self.aggregator.push_poses(chunk))
+        self._track_stall()
+        return self.poll()
+
+    def finalize_poses(self) -> list[SegmentResult]:
+        """Declare the pose stream complete: every still-stalled frame is
+        released through `StreamConfig.pose_extrapolation` (its pose can
+        no longer gain a bracketing sample). Call before `flush` when the
+        tracker ends behind the event front."""
+        if self._flushed:
+            raise RuntimeError(
+                "finalize_poses after flush: the engine is drained")
+        if not self.pose_gated:
+            raise RuntimeError(
+                "finalize_poses requires a pose-gated engine: construct "
+                "with traj=None (or a TrajectoryBuffer)")
+        self._ingest(self.aggregator.finalize_poses())
+        self._track_stall()
+        return self.poll()
+
+    def _track_stall(self) -> None:
+        n = self.aggregator.stalled_frames
+        self.stats["stalled_frames"] = n
+        self.stats["max_stalled"] = max(self.stats["max_stalled"], n)
+        self.stats["pose_watermark"] = self.aggregator.pose_watermark
 
     def _ingest(self, frames: EventFrames) -> None:
         n = int(frames.xy.shape[0])
@@ -364,9 +460,28 @@ class EMVSStreamEngine:
     def flush(self) -> EMVSResult:
         """End of stream: flush the partial frame and the open segment,
         drain all in-flight sweeps, and return the accumulated result
-        (same ordering and types as offline `run_emvs`)."""
+        (same ordering and types as offline `run_emvs`).
+
+        In pose-gated mode, flushing while frames still await their pose
+        chunks raises `PoseStallError` (naming the stalled frame count
+        and the watermark) — either push the missing chunks or call
+        `finalize_poses` first. The engine stays usable after the error
+        for the pose side only: frames released by later pose chunks are
+        not lost, but `push` is rejected from the first flush attempt on
+        (the event tail was already emitted as a padded frame)."""
         if not self._flushed:
-            self._ingest(self.aggregator.flush())
+            if not self._tail_flushed:
+                self._tail_flushed = True
+                self._ingest(self.aggregator.flush())
+            self._track_stall()
+            stalled = self.aggregator.stalled_frames
+            if stalled:
+                raise PoseStallError(
+                    f"flush with {stalled} frame(s) stalled awaiting poses: "
+                    f"pose watermark t={self.aggregator.pose_watermark:.6g}, "
+                    f"oldest stalled frame t_mid="
+                    f"{self.aggregator.oldest_stalled_t:.6g}; push the "
+                    f"missing pose chunks or call finalize_poses() first")
             tail = self.planner.flush()
             if tail is not None:
                 self._dispatch_all([tail])

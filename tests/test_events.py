@@ -2,14 +2,17 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.camera import CameraModel, in_bounds_mask, undistort_events, distort_normalized
 from repro.events.aggregation import (
     PARKED_COORD,
+    PoseExtrapolationWarning,
     StreamingAggregator,
     aggregate,
     empty_event_frames,
@@ -113,6 +116,40 @@ def test_pose_interpolation_monotone(small_scene):
     tx = np.asarray(poses.t[:, 0])
     lo, hi = np.asarray(traj.poses.t[:, 0]).min(), np.asarray(traj.poses.t[:, 0]).max()
     assert (tx >= lo - 1e-5).all() and (tx <= hi + 1e-5).all()
+
+
+def test_aggregate_pose_extrapolation_policies(cam, small_scene):
+    """Offline aggregation no longer freezes out-of-span poses silently:
+    the default warns (clamped numerics kept for equivalence), "raise"
+    refuses, and the seed's silent clamp needs explicit opt-in."""
+    from repro.events.aggregation import PoseExtrapolationError
+    from repro.events.simulator import Trajectory
+
+    ev = small_scene["events"]
+    traj = small_scene["traj"]
+    # truncate the trajectory so the stream's tail lies beyond the poses
+    times = np.asarray(traj.times)
+    cut = int(times.shape[0]) // 2
+    short = Trajectory(times=traj.times[:cut],
+                       poses=type(traj.poses)(traj.poses.R[:cut],
+                                              traj.poses.t[:cut]))
+    with pytest.warns(PoseExtrapolationWarning, match="outside the trajectory"):
+        warned = aggregate(cam, ev, short, events_per_frame=1024)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # "clamp" must stay silent
+        clamped = aggregate(cam, ev, short, events_per_frame=1024,
+                            pose_extrapolation="clamp")
+    # the warning changes visibility, never numerics (seed equivalence)
+    np.testing.assert_array_equal(np.asarray(warned.poses.R),
+                                  np.asarray(clamped.poses.R))
+    np.testing.assert_array_equal(np.asarray(warned.poses.t),
+                                  np.asarray(clamped.poses.t))
+    with pytest.raises(PoseExtrapolationError, match="outside the trajectory"):
+        aggregate(cam, ev, short, events_per_frame=1024,
+                  pose_extrapolation="raise")
+    with pytest.raises(ValueError, match="unknown pose_extrapolation"):
+        aggregate(cam, ev, short, events_per_frame=1024,
+                  pose_extrapolation="freeze")
 
 
 def test_undistort_inverts_distortion():

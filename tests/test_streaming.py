@@ -30,7 +30,11 @@ from repro.core.pipeline import (
     segment_keyframes,
 )
 from repro.events.aggregation import StreamingAggregator, aggregate
-from repro.events.simulator import EventStream, Trajectory
+from repro.events.simulator import EventStream, Trajectory, slice_trajectory
+from repro.events.trajectory_stream import (
+    PoseStallError,
+    TrajectoryBuffer,
+)
 from repro.serving.emvs_stream import (
     EMVSStreamEngine,
     StreamConfig,
@@ -78,6 +82,182 @@ def test_stream_matches_offline_all_chunkings(cam, stream_scene, formulation,
             StreamConfig(events_per_frame=EVENTS_PER_FRAME))
         res = _stream(engine, ev, chunk)
         _assert_results_match(res, ref, exact_dsi=(voting == "nearest"))
+
+
+# --- streamed trajectory: event x pose chunk interleavings ----------------
+
+# Pose-lag profiles: how far the pose stream runs relative to the event
+# front. "ahead" = the whole trajectory is known before the first event
+# (an oracle delivered in one chunk); "tracking" = pose chunks trail the
+# event front by a small lag (the realistic VIO tracker); "behind" = every
+# pose arrives after the last event (worst case: everything stalls, then
+# one burst of releases).
+POSE_PROFILES = ("ahead", "tracking", "behind")
+
+
+def _stream_gated(engine: EMVSStreamEngine, ev: EventStream,
+                  traj: Trajectory, chunk: int, profile: str,
+                  lag: float = 0.06):
+    """Drive a pose-gated engine with the given event chunking and
+    pose-lag profile; returns the flushed result."""
+    times = np.asarray(traj.times)
+    n_pose = times.shape[0]
+    sent = 0
+
+    def send_up_to(hi: int):
+        nonlocal sent
+        if hi > sent:
+            engine.push_poses(slice_trajectory(traj, sent, hi))
+            sent = hi
+
+    if profile == "ahead":
+        send_up_to(n_pose)
+    for c in iter_event_chunks(ev, chunk):
+        engine.push(c)
+        if profile == "tracking":
+            front = float(np.asarray(c.t)[-1]) - lag
+            send_up_to(int(np.searchsorted(times, front, side="right")))
+    send_up_to(n_pose)  # tracker drains after the sensor stops
+    engine.finalize_poses()
+    return engine.flush()
+
+
+@pytest.mark.parametrize("formulation,voting,quantized", GRID)
+def test_pose_streamed_matches_offline_grid(cam, stream_scene, formulation,
+                                            voting, quantized):
+    """Full option grid with the trajectory arriving in chunks behind the
+    event front: per-segment results must equal the offline oracle path
+    exactly (nearest/integer bitwise, bilinear allclose)."""
+    ev, traj, frames, dsi_cfg = stream_scene
+    opts = EMVSOptions(formulation=formulation, voting=voting,
+                       quantized=quantized, keyframe_dist_frac=0.03)
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, None, opts,
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME))
+    res = _stream_gated(engine, ev, traj, 997, "tracking")
+    _assert_results_match(res, ref, exact_dsi=(voting == "nearest"))
+    assert engine.stats["stalled_frames"] == 0
+    assert engine.stats["pose_watermark"] == float(np.asarray(traj.times)[-1])
+
+
+@pytest.mark.parametrize("profile", POSE_PROFILES)
+@pytest.mark.parametrize("formulation,voting,quantized",
+                         [("matmul", "nearest", True),
+                          ("scatter", "bilinear", False)])
+def test_pose_event_interleavings(cam, stream_scene, formulation, voting,
+                                  quantized, profile):
+    """3 event chunkings x 3 pose-lag profiles: any interleaving of event
+    and pose chunks reproduces the offline result. Covers poses arriving
+    far ahead of, slightly behind, and entirely after the events."""
+    ev, traj, frames, dsi_cfg = stream_scene
+    opts = EMVSOptions(formulation=formulation, voting=voting,
+                       quantized=quantized, keyframe_dist_frac=0.03)
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    n = int(ev.t.shape[0])
+    for chunk in (EVENTS_PER_FRAME, 997, n):  # one frame, prime, whole
+        engine = EMVSStreamEngine(
+            cam, dsi_cfg, None, opts,
+            StreamConfig(events_per_frame=EVENTS_PER_FRAME))
+        res = _stream_gated(engine, ev, traj, chunk, profile)
+        _assert_results_match(res, ref, exact_dsi=(voting == "nearest"))
+        if profile == "behind":
+            # every full frame stalls (the flushed tail frame arrives
+            # after finalize_poses, so it alone never waits)
+            assert engine.stats["max_stalled"] >= engine.stats["frames"] - 1, (
+                "with every pose arriving after the events, all full "
+                "frames must have stalled at some point")
+
+
+def test_pose_streamed_results_arrive_before_event_end(cam, stream_scene):
+    """Online operation survives pose gating: with a tracker lagging the
+    event front, segments still complete while events arrive."""
+    ev, traj, _, dsi_cfg = stream_scene
+    opts = EMVSOptions(keyframe_dist_frac=0.03)
+    engine = EMVSStreamEngine(cam, dsi_cfg, None, opts,
+                              StreamConfig(events_per_frame=EVENTS_PER_FRAME))
+    times = np.asarray(traj.times)
+    early, sent = [], 0
+    for c in iter_event_chunks(ev, EVENTS_PER_FRAME):
+        early.extend(engine.push(c))
+        hi = int(np.searchsorted(times, float(np.asarray(c.t)[-1]) - 0.05,
+                                 side="right"))
+        if hi > sent:
+            early.extend(engine.push_poses(slice_trajectory(traj, sent, hi)))
+            sent = hi
+    engine.push_poses(slice_trajectory(traj, sent, times.shape[0]))
+    engine.finalize_poses()
+    res = engine.flush()
+    assert len(early) >= 1, "no segment completed before end of events"
+    assert len(res.segments) > len(early)
+
+
+def test_flush_with_missing_poses_raises_and_recovers(cam, stream_scene):
+    """flush while frames still await poses: explicit PoseStallError
+    naming the stalled frame count and the watermark — and the engine
+    stays usable (late pose chunks still release the frames)."""
+    ev, traj, frames, dsi_cfg = stream_scene
+    opts = EMVSOptions(keyframe_dist_frac=0.03)
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    engine = EMVSStreamEngine(cam, dsi_cfg, None, opts,
+                              StreamConfig(events_per_frame=EVENTS_PER_FRAME))
+    for c in iter_event_chunks(ev, 997):
+        engine.push(c)
+    n_frames = engine.stats["frames"] + engine.aggregator.stalled_frames
+    with pytest.raises(PoseStallError) as ei:
+        engine.flush()
+    # the error names the stalled count (all frames incl. the flushed
+    # tail) and the watermark (-inf: no pose sample ever arrived)
+    assert f"{n_frames + 1} frame(s)" in str(ei.value)
+    assert "watermark" in str(ei.value)
+    # the failed flush already emitted the padded tail frame: more events
+    # would silently shift every later frame boundary, so push is rejected
+    with pytest.raises(RuntimeError, match="tail was already emitted"):
+        engine.push(next(iter_event_chunks(ev, 64)))
+    engine.push_poses(traj)
+    engine.finalize_poses()
+    res = engine.flush()
+    _assert_results_match(res, ref, exact_dsi=True)
+
+
+def test_one_pose_chunk_closes_multiple_stalled_segments(cam, stream_scene):
+    """A single pose chunk advancing the watermark far enough must
+    release a burst of stalled frames, close several segments at once,
+    and leave the frame store consistent (eviction can run through the
+    released backlog without window underflow)."""
+    ev, traj, frames, dsi_cfg = stream_scene
+    opts = EMVSOptions(keyframe_dist_frac=0.03)
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    assert len(ref.segments) >= 2
+    engine = EMVSStreamEngine(cam, dsi_cfg, None, opts,
+                              StreamConfig(events_per_frame=EVENTS_PER_FRAME))
+    for c in iter_event_chunks(ev, EVENTS_PER_FRAME):
+        engine.push(c)
+    assert engine.stats["dispatches"] == 0, "nothing can dispatch unposed"
+    engine.push_poses(traj)  # one chunk covers every stalled frame
+    assert engine.stats["segments"] >= 2, (
+        "the pose burst must close multiple segments in one push_poses")
+    # eviction ran through the released backlog: the retained window
+    # starts exactly at the open segment, and never underflowed
+    assert engine._store.base == engine.planner.open_start
+    assert engine._store.base <= engine._store.end
+    engine.finalize_poses()
+    res = engine.flush()
+    _assert_results_match(res, ref, exact_dsi=True)
+
+
+def test_pose_stream_calls_require_gated_engine(cam, stream_scene):
+    ev, traj, _, dsi_cfg = stream_scene
+    engine = EMVSStreamEngine(cam, dsi_cfg, traj)  # oracle mode
+    with pytest.raises(RuntimeError, match="pose-gated"):
+        engine.push_poses(traj)
+    with pytest.raises(RuntimeError, match="pose-gated"):
+        engine.finalize_poses()
+    # a pre-filled TrajectoryBuffer is a valid streamed source
+    buf = TrajectoryBuffer(traj)
+    gated = EMVSStreamEngine(cam, dsi_cfg, buf)
+    assert gated.pose_gated
+    assert gated.stats["pose_watermark"] == float(np.asarray(traj.times)[-1])
 
 
 def test_stream_results_arrive_before_flush(cam, stream_scene):
