@@ -26,6 +26,24 @@ emitted into `BENCH_emvs.json` ("streaming_latency" section, with a
 Both paths are measured cold (fresh jit caches): that is what a newly
 started sensor pipeline pays.
 
+Third axis: the DISPATCH-POLICY SWEEP (its own "dispatch_policy_sweep"
+section in `BENCH_emvs.json`). Each `StreamConfig.dispatch_policy`
+("latency" = one sweep per closed segment, "throughput" = fill the
+largest S bucket before dispatching, "adaptive" = per-segment while the
+in-flight queue is shallow, coalesce when it saturates) streams the same
+sequence under a steady per-frame trickle and a single whole-stream
+burst. Unlike the cold headline numbers, the policy runs are measured
+WARM (every sweep variant precompiled, best of N repeats): the policies
+differ in dispatch overhead and batching, not in compile behavior, and
+the sustained segments/s comparison must not drown in one-off compile
+noise. Results must stay bitwise-equal to offline under every policy,
+and the REGRESSION GATE at the end fails the run if the adaptive policy
+stops coalescing under burst (structural: fewer dispatches than
+segments — deterministic, so CI noise cannot flip it) or if its
+sustained segments/s falls below min_ratio x the per-segment
+("latency") baseline — strict on full-size runs, a loose crash barrier
+on the sub-second smoke, whose timings jitter ~10% even idle.
+
     PYTHONPATH=src python benchmarks/streaming_latency.py [--dry-run]
 """
 from __future__ import annotations
@@ -46,6 +64,7 @@ from repro.core.dsi import DSIConfig
 from repro.core.pipeline import (
     EMVSOptions,
     bucket_capacity,
+    pad_segments,
     plan_segments,
     process_segments_batched,
     run_emvs,
@@ -112,6 +131,118 @@ def stream_with_pose_lag(cam, dsi_cfg, traj, ev, opts, scfg,
     return res, (t_total if first is None else first), t_total, engine.stats
 
 
+def _assert_bitwise(res, ref, what: str) -> None:
+    assert [s.frame_range for s in res.segments] == \
+        [s.frame_range for s in ref.segments], f"{what}: boundaries diverged"
+    worst = 0.0
+    for sa, sb in zip(res.segments, ref.segments):
+        worst = max(worst, float(np.abs(
+            np.asarray(sa.dsi, np.float32) - np.asarray(sb.dsi, np.float32)
+        ).max()))
+    assert worst == 0.0, f"{what}: max DSI delta {worst} (must be bitwise)"
+
+
+def _precompile_variants(cam, dsi_cfg, frames, segs, opts, scfg) -> None:
+    """Compile every (S bucket x frame capacity) sweep variant a policy
+    run could dispatch — including the per-dispatch depth-map -> point
+    -cloud conversion, which is jit'd per S-bucket shape too — so the
+    timed runs measure scheduling, not compilation (the adaptive
+    schedule is timing-dependent; a cold variant mid-run would corrupt
+    the A/B)."""
+    from repro.core.geometry import SE3
+    from repro.core.pointcloud import depth_maps_to_points
+
+    for cap in sorted({bucket_capacity(b - a) for a, b in segs}):
+        seg = next(s for s in segs if bucket_capacity(s[1] - s[0]) == cap)
+        for s_bucket in scfg.segment_buckets:
+            batch = pad_segments(frames, [seg] * s_bucket, cap)
+            _, dms = process_segments_batched(cam, dsi_cfg, batch, opts)
+            pcs = depth_maps_to_points(cam, dms,
+                                       SE3(batch.ref_R, batch.ref_t))
+            dms.depth.block_until_ready()
+            pcs.points.block_until_ready()
+
+
+def _stream_policy_once(cam, dsi_cfg, traj, ev, opts, scfg, chunk_events):
+    """One timed streaming run: per-segment completion timeline + stats."""
+    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts, scfg)
+    timeline: list[tuple[float, tuple[int, int]]] = []
+    t0 = time.perf_counter()
+    for c in iter_event_chunks(ev, chunk_events):
+        for seg in engine.push(c):
+            timeline.append((time.perf_counter() - t0, seg.frame_range))
+    res = engine.flush()
+    t_total = time.perf_counter() - t0
+    seen = {fr for _, fr in timeline}
+    timeline += [(t_total, s.frame_range) for s in res.segments
+                 if s.frame_range not in seen]
+    return res, t_total, timeline, engine.stats
+
+
+def dispatch_policy_sweep(cam, dsi_cfg, traj, ev, opts, e_frame, frames,
+                          ref, repeats: int) -> list[dict]:
+    """Policy A/B: sustained segments/s and p50/p99 per-segment
+    first-depth latency per (load profile x dispatch policy), measured
+    warm, best of `repeats`. Every run is asserted bitwise-equal to the
+    offline reference — the policies may only move the schedule."""
+    n_events = int(ev.t.shape[0])
+    segs = plan_segments(frames, dsi_cfg, opts)
+    scfg_by_policy = {
+        policy: StreamConfig(events_per_frame=e_frame, dispatch_policy=policy)
+        for policy in ("latency", "throughput", "adaptive")}
+    # one precompile covers every config: the sweep/point-cloud variants
+    # depend only on the S buckets and capacities, not on the policy
+    _precompile_variants(cam, dsi_cfg, frames, segs, opts,
+                         next(iter(scfg_by_policy.values())))
+    configs = [(profile, chunk_events, policy)
+               for profile, chunk_events in (("burst", n_events),
+                                             ("trickle", e_frame))
+               for policy in scfg_by_policy]
+    # Repeats run ROUND-ROBIN over the configs (not back-to-back per
+    # config) so slow phases of a shared machine spread across all
+    # policies instead of sinking whichever config they landed on; the
+    # reported number is each config's best (min-time) repeat.
+    best: dict = {}
+    for _ in range(repeats):
+        for cfg in configs:
+            profile, chunk_events, policy = cfg
+            res, t_total, timeline, stats = _stream_policy_once(
+                cam, dsi_cfg, traj, ev, opts, scfg_by_policy[policy],
+                chunk_events)
+            _assert_bitwise(res, ref, f"policy={policy} {profile}")
+            if cfg not in best or t_total < best[cfg][0]:
+                best[cfg] = (t_total, timeline, stats, len(res.segments))
+    rows = []
+    print(f"\ndispatch-policy sweep (warm, best of {repeats}, interleaved):")
+    print(f"{'profile':<10}{'policy':<12}{'seg/s':>8}{'p50 s':>8}"
+          f"{'p99 s':>8}{'dispatches':>11}{'coalesced':>10}{'max queue':>10}")
+    for cfg in configs:
+        profile, _, policy = cfg
+        t_total, timeline, stats, n_segs = best[cfg]
+        lat = np.asarray([t for t, _ in timeline], np.float64)
+        row = {
+            "profile": profile,
+            "policy": policy,
+            "segments_per_s": round(n_segs / t_total, 3),
+            "end_to_end_s": round(t_total, 3),
+            "first_depth_p50_s": round(float(np.percentile(lat, 50)), 3),
+            "first_depth_p99_s": round(float(np.percentile(lat, 99)), 3),
+            "dispatches": int(stats["dispatches"]),
+            "coalesced_dispatches": int(stats["coalesced_dispatches"]),
+            "coalesced_segments": int(stats["coalesced_segments"]),
+            "max_pending": int(stats["max_pending"]),
+        }
+        rows.append(row)
+        print(f"{profile:<10}{policy:<12}{row['segments_per_s']:>8.2f}"
+              f"{row['first_depth_p50_s']:>8.3f}"
+              f"{row['first_depth_p99_s']:>8.3f}"
+              f"{row['dispatches']:>11d}"
+              f"{row['coalesced_dispatches']:>10d}"
+              f"{row['max_pending']:>10d}")
+    print("OK: every policy x profile is bitwise-equal to offline")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
@@ -142,27 +273,11 @@ def main() -> None:
     # --- streaming: depth maps while events still arrive ------------------
     scfg = StreamConfig(events_per_frame=e_frame)
     jax.clear_caches()
-    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts, scfg)
-    timeline: list[tuple[float, tuple[int, int]]] = []
-    t0 = time.perf_counter()
-    for chunk in iter_event_chunks(ev, args.chunk_frames * e_frame):
-        for seg in engine.push(chunk):
-            timeline.append((time.perf_counter() - t0, seg.frame_range))
-    res = engine.flush()
-    t_total = time.perf_counter() - t0
-    done = {fr for _, fr in timeline}
-    timeline += [(t_total, s.frame_range) for s in res.segments
-                 if s.frame_range not in done]
+    res, t_total, timeline, stream_stats = _stream_policy_once(
+        cam, dsi_cfg, traj, ev, opts, scfg, args.chunk_frames * e_frame)
 
     # --- checks -----------------------------------------------------------
-    assert [s.frame_range for s in res.segments] == \
-        [s.frame_range for s in ref.segments], "segment boundaries diverged"
-    worst = 0.0
-    for sa, sb in zip(res.segments, ref.segments):
-        worst = max(worst, float(np.abs(
-            np.asarray(sa.dsi, np.float32) - np.asarray(sb.dsi, np.float32)
-        ).max()))
-    assert worst == 0.0, f"nearest voting must match offline bitwise: {worst}"
+    _assert_bitwise(res, ref, "streaming (nearest voting)")
     variants = process_segments_batched._cache_size()
     bound = len(scfg.segment_buckets) * len(caps)
     assert variants <= bound, f"jit cache {variants} exceeds bound {bound}"
@@ -178,7 +293,7 @@ def main() -> None:
           f"{n_events / t_total / 1e6:>12.3f}")
     print(f"\nper-segment completion times (s): "
           f"{', '.join(f'{t:.2f}' for t in gaps)}")
-    print(f"streaming stats: {engine.stats}")
+    print(f"streaming stats: {stream_stats}")
     print(f"\nfirst-segment latency speedup vs offline end-to-end: "
           f"{t_offline / first:.2f}x")
     assert first < t_offline, (
@@ -198,17 +313,7 @@ def main() -> None:
         lag_res, lag_first, lag_total, stats = stream_with_pose_lag(
             cam, dsi_cfg, traj, ev, opts, scfg, lag,
             args.chunk_frames * e_frame)
-        assert [s.frame_range for s in lag_res.segments] == \
-            [s.frame_range for s in ref.segments], \
-            f"pose lag {lag}s changed segment boundaries"
-        lag_worst = 0.0
-        for sa, sb in zip(lag_res.segments, ref.segments):
-            lag_worst = max(lag_worst, float(np.abs(
-                np.asarray(sa.dsi, np.float32)
-                - np.asarray(sb.dsi, np.float32)).max()))
-        assert lag_worst == 0.0, (
-            f"pose lag {lag}s must not change the reconstruction "
-            f"(max DSI delta {lag_worst})")
+        _assert_bitwise(lag_res, ref, f"pose lag {lag}s")
         print(f"{lag:<10.3f}{lag_first:>14.2f}{lag_total:>14.2f}"
               f"{stats['max_stalled']:>12d}{stats['pose_watermark']:>12.3f}")
         pose_lag_rows.append({
@@ -220,6 +325,39 @@ def main() -> None:
             "pose_chunks": int(stats["pose_chunks"]),
         })
     print("OK: reconstruction is pose-lag invariant (bitwise)")
+
+    # --- dispatch-policy sweep + regression gate --------------------------
+    policy_rows = dispatch_policy_sweep(cam, dsi_cfg, traj, ev, opts, e_frame,
+                                        frames, ref,
+                                        repeats=3 if args.dry_run else 5)
+    burst = {r["policy"]: r for r in policy_rows if r["profile"] == "burst"}
+    # The gate has two parts. STRUCTURAL (all run sizes): under burst the
+    # adaptive policy must actually coalesce — fewer dispatches than
+    # segments — which is deterministic, immune to timing noise, and
+    # catches the real regression class (the coalescer silently
+    # degenerating to per-segment dispatch). TIMING: adaptive sustained
+    # segments/s must not fall below min_ratio x the per-segment
+    # baseline; strict (1.0) on the full-size run, but the CI smoke's
+    # sub-second burst runs have been measured to jitter by ~10% even on
+    # an idle machine, so the dry-run timing check is a loose crash
+    # barrier (0.85) against gross slowdowns, not a tie-breaker the
+    # noise can flip. Both travel in the gate record so the ci.yml
+    # re-check applies the same rules.
+    gate = {
+        "profile": "burst",
+        "adaptive_segments_per_s": burst["adaptive"]["segments_per_s"],
+        "latency_segments_per_s": burst["latency"]["segments_per_s"],
+        "adaptive_dispatches": burst["adaptive"]["dispatches"],
+        "adaptive_coalesced_dispatches":
+            burst["adaptive"]["coalesced_dispatches"],
+        "segments": len(ref.segments),
+        "min_ratio": 0.85 if args.dry_run else 1.0,
+    }
+    update_bench_json("dispatch_policy_sweep", {
+        "dry_run": bool(args.dry_run),
+        "rows": policy_rows,
+        "gate": gate,
+    }, path=args.json_out)
 
     path = update_bench_json("streaming_latency", {
         "dry_run": bool(args.dry_run),
@@ -233,6 +371,29 @@ def main() -> None:
         "pose_lag_sweep": pose_lag_rows,
     }, path=args.json_out)
     print(f"wrote {path}")
+
+    # gate LAST, after every section is persisted: a failing gate must
+    # not cost the artifact the comparison data that explains it
+    assert (gate["adaptive_coalesced_dispatches"] >= 1
+            and gate["adaptive_dispatches"] < gate["segments"]), (
+        f"REGRESSION: adaptive policy stopped coalescing under burst "
+        f"({gate['adaptive_dispatches']} dispatches for "
+        f"{gate['segments']} segments, "
+        f"{gate['adaptive_coalesced_dispatches']} coalesced) — it has "
+        f"degenerated to per-segment dispatch")
+    floor = gate["min_ratio"] * gate["latency_segments_per_s"]
+    assert gate["adaptive_segments_per_s"] >= floor, (
+        f"REGRESSION: adaptive policy sustains "
+        f"{gate['adaptive_segments_per_s']} segments/s under burst, below "
+        f"{gate['min_ratio']:g}x the per-segment baseline "
+        f"{gate['latency_segments_per_s']} — coalescing must not cost "
+        f"throughput")
+    print(f"OK: adaptive coalesces under burst "
+          f"({gate['adaptive_dispatches']} dispatches / "
+          f"{gate['segments']} segments) and sustains "
+          f"{gate['adaptive_segments_per_s']:.2f} segments/s vs the "
+          f"per-segment baseline {gate['latency_segments_per_s']:.2f} "
+          f"(min ratio {gate['min_ratio']:g})")
 
 
 if __name__ == "__main__":

@@ -10,12 +10,28 @@ default nearest/integer datapath.
 
     PYTHONPATH=src python examples/emvs_streaming.py \
         [--scene simulation_3walls] [--chunk-frames 2] [--sweep sharded] \
-        [--pose-lag 0.1] [--out /tmp/emvs_stream.npz]
+        [--policy adaptive] [--pose-lag 0.1] [--max-stall 32] \
+        [--out /tmp/emvs_stream.npz]
 
 `--sweep sharded` dispatches each closed-segment bucket through
 `repro.distributed.emvs.process_segments_sharded` (segment axis sharded
 over all local devices) instead of the serial `lax.map` sweep; results
 stay bit-identical on the default nearest/integer datapath.
+
+`--policy` picks how closed segments leave the coalescing queue:
+"latency" sweeps every segment the moment it closes (lowest
+time-to-depth-map), "throughput" holds segments until the largest S
+bucket fills (fewest dispatches, biggest batches — pair with `--sweep
+sharded` for cross-device parallelism), "adaptive" (default) never
+waits while the device keeps up — a lone closed segment dispatches
+solo, an already-queued backlog coalesces — and holds segments to
+coalesce once the in-flight queue saturates. The reconstruction is
+bit-identical under every policy — only the dispatch schedule moves.
+
+`--max-stall N` (pose-gated mode) bounds the pose-stall queue: if the
+tracker falls more than N frames behind the event front, `push` raises
+`PoseStallError` instead of buffering unboundedly (the frames are kept;
+pushing the missing pose chunks recovers).
 
 `--pose-lag SECONDS` switches the pose source from the fully-known
 `Trajectory` oracle to the streamed mode: pose chunks are pushed via
@@ -59,9 +75,25 @@ def main() -> None:
     ap.add_argument("--sweep", default="batched",
                     choices=["batched", "sharded"],
                     help="segment-sweep backend (see StreamConfig.sweep)")
+    ap.add_argument("--policy", default="adaptive",
+                    choices=["latency", "throughput", "adaptive"],
+                    help="dispatch policy for the closed-segment coalescing "
+                         "queue: latency = sweep each segment immediately "
+                         "(lowest first-depth latency), throughput = fill "
+                         "the largest S bucket before dispatching (highest "
+                         "sustained segments/s), adaptive = never wait while "
+                         "the device keeps up (lone segments go solo, queued "
+                         "backlogs coalesce), hold-to-coalesce when the "
+                         "in-flight queue saturates (default)")
     ap.add_argument("--pose-lag", type=float, default=None,
                     help="stream poses too, lagging the event front by this "
                          "many seconds (default: fully-known pose oracle)")
+    ap.add_argument("--max-stall", type=int, default=None,
+                    help="pose-gated back-pressure: max frames stalled past "
+                         "the pose watermark before push raises "
+                         "PoseStallError; frames are buffered first, so "
+                         "pushing the missing poses recovers "
+                         "(default: unbounded)")
     ap.add_argument("--out", default="/tmp/emvs_stream.npz")
     args = ap.parse_args()
 
@@ -77,8 +109,14 @@ def main() -> None:
           f"DSI {dsi_cfg.shape}, chunk={args.chunk_frames} frame(s)")
 
     pose_gated = args.pose_lag is not None
+    if args.max_stall is not None and not pose_gated:
+        ap.error("--max-stall requires --pose-lag: the stall bound only "
+                 "applies to a streamed (pose-gated) trajectory")
     engine = EMVSStreamEngine(cam, dsi_cfg, None if pose_gated else traj,
-                              opts, StreamConfig(sweep=args.sweep))
+                              opts, StreamConfig(
+                                  sweep=args.sweep,
+                                  dispatch_policy=args.policy,
+                                  max_stalled_frames=args.max_stall))
     t0 = time.time()
 
     def report(seg, when):
@@ -127,7 +165,11 @@ def main() -> None:
             report(seg, time.time() - t0)
     print(f"streamed {engine.stats['frames']} frames, "
           f"{engine.stats['dispatches']} dispatches "
-          f"({engine.stats['padded_segments']} padded segment rows)")
+          f"({engine.stats['padded_segments']} padded segment rows); "
+          f"policy={args.policy}: {engine.stats['coalesced_segments']} "
+          f"segment(s) coalesced into "
+          f"{engine.stats['coalesced_dispatches']} batched dispatch(es), "
+          f"peak queue depth {engine.stats['max_pending']}")
 
     # the streamed reconstruction is the offline one, segment for segment
     ref = run_emvs(cam, dsi_cfg,

@@ -39,9 +39,14 @@ criterion frame-by-frame as events arrive, closed segments are padded
 into the same capacity buckets by `pad_segments`, and
 `process_segments_batched` sweeps them with the segment axis padded to a
 small fixed set of sizes so the jit cache stays bounded over an
-unbounded stream. Per-segment outputs are bit-identical to `run_emvs`
-on the integer/nearest datapaths for every chunking of the input
-(tests/test_streaming.py).
+unbounded stream. The engine's coalescing dispatcher groups queued
+closed segments with `dispatch_group_head` / `plan_dispatch_groups`
+(below): FIFO-order partitioning into same-capacity runs of at most one
+S bucket each, so a dispatch policy can trade latency for batch size
+without touching the numbers. Per-segment outputs are bit-identical to
+`run_emvs` on the integer/nearest datapaths for every chunking of the
+input and every dispatch policy (tests/test_streaming.py,
+tests/test_adaptive_dispatch.py).
 """
 from __future__ import annotations
 
@@ -217,6 +222,61 @@ def bucket_capacity(num_frames: int, minimum: int = SEGMENT_BUCKET_MIN) -> int:
     if num_frames < 1:
         raise ValueError(f"segment must have at least one frame, got {num_frames}")
     return max(minimum, -(-num_frames // minimum) * minimum)
+
+
+def dispatch_group_head(segs: Sequence[tuple[int, int]], max_group: int,
+                        minimum: int = SEGMENT_BUCKET_MIN
+                        ) -> tuple[int, int, bool]:
+    """Head group of a FIFO queue of closed segments: `(n, capacity, sealed)`.
+
+    The head group is the longest prefix of `segs` whose members share one
+    `bucket_capacity`, capped at `max_group` segments (the largest S
+    bucket a dispatch may carry). `sealed` means the group can never grow:
+    either it already holds `max_group` segments, or the next queued
+    segment needs a different frame capacity — a throughput-oriented
+    coalescer may keep an unsealed group waiting for more segments, but a
+    sealed one gains nothing by waiting.
+
+    One SegmentBatch carries a single frame capacity, and streamed
+    results must release in segment-close (FIFO) order, so only the head
+    of the queue is ever eligible — a group never skips past a
+    different-capacity segment queued ahead of it.
+    """
+    if not segs:
+        raise ValueError("dispatch_group_head needs a non-empty queue")
+    if max_group < 1:
+        raise ValueError(f"max_group must be >= 1, got {max_group}")
+    cap = bucket_capacity(segs[0][1] - segs[0][0], minimum)
+    n = 1
+    while (n < len(segs) and n < max_group
+           and bucket_capacity(segs[n][1] - segs[n][0], minimum) == cap):
+        n += 1
+    sealed = n == max_group or n < len(segs)
+    return n, cap, sealed
+
+
+def plan_dispatch_groups(segs: Sequence[tuple[int, int]], max_group: int,
+                         minimum: int = SEGMENT_BUCKET_MIN
+                         ) -> list[tuple[list[tuple[int, int]], int]]:
+    """Partition a FIFO list of closed segments into dispatch groups.
+
+    Repeated `dispatch_group_head`, so the partition is exactly what a
+    streaming coalescer draining the whole queue would dispatch: each
+    group is `(segments, frame_capacity)`, groups concatenate back to
+    `segs` in order (nothing dropped, duplicated, or reordered), every
+    group holds 1..max_group segments of one shared capacity. This is
+    the bucket planning `run_emvs`'s capacity map performs offline,
+    restated under the streaming FIFO-release constraint — the
+    coalescing-planner property test pins these invariants for any
+    segment sequence.
+    """
+    groups: list[tuple[list[tuple[int, int]], int]] = []
+    i = 0
+    while i < len(segs):
+        n, cap, _ = dispatch_group_head(segs[i:], max_group, minimum)
+        groups.append((list(segs[i:i + n]), cap))
+        i += n
+    return groups
 
 
 def _host_frames(frames: EventFrames) -> EventFrames:

@@ -142,21 +142,42 @@ class StreamingAggregator:
         any interleaving of event and pose chunks. `finalize_poses`
         declares the pose stream over: remaining frames release through
         the `pose_extrapolation` policy (they can only be beyond-span).
+
+    `max_stalled` (pose-gated mode only) is the max-stall back-pressure
+    bound: a push that leaves more than `max_stalled` frames stalled
+    *past the current watermark* (i.e. frames the received poses cannot
+    release — a tracker that keeps up never trips the bound) raises
+    `PoseStallError`. The check runs after buffering the chunk's frames
+    and before any release, so no event is lost: the caller recovers by
+    pushing the missing pose chunks. Without a bound a tracker that
+    silently dies would grow the stall queue (and every queue downstream
+    of it) with the event rate, unboundedly.
     """
 
     def __init__(self, cam: CameraModel, traj: Trajectory | TrajectoryBuffer,
                  events_per_frame: int = EVENTS_PER_FRAME, *,
-                 pose_extrapolation: str = "warn"):
+                 pose_extrapolation: str = "warn",
+                 max_stalled: int | None = None):
         if events_per_frame < 1:
             raise ValueError(f"events_per_frame must be >= 1, got {events_per_frame}")
         if pose_extrapolation not in POSE_EXTRAPOLATION_POLICIES:
             raise ValueError(
                 f"unknown pose_extrapolation policy {pose_extrapolation!r}: "
                 f"expected one of {POSE_EXTRAPOLATION_POLICIES}")
+        if max_stalled is not None and max_stalled < 1:
+            raise ValueError(
+                f"max_stalled must be >= 1 (or None for unbounded), got "
+                f"{max_stalled}")
         self.cam = cam
         self.traj = traj
         self.pose_extrapolation = pose_extrapolation
+        self.max_stalled = max_stalled
         self._gated = isinstance(traj, TrajectoryBuffer)
+        if max_stalled is not None and not self._gated:
+            raise ValueError(
+                "max_stalled requires a TrajectoryBuffer pose source: a "
+                "fully-known Trajectory oracle never stalls frames, so "
+                "the bound would silently do nothing")
         # one host copy of the oracle's sample times for span checks
         self._traj_times_host = (None if self._gated
                                  else np.asarray(traj.times, np.float32))
@@ -274,6 +295,28 @@ class StreamingAggregator:
             for k in range(n_frames):
                 self._stalled.append(
                     _StalledFrame(xy_f[k], valid_f[k], float(t_mid[k])))
+            # Max-stall back-pressure: an event front running unboundedly
+            # ahead of the pose tracker would grow the stall queue (and
+            # everything downstream of it — the engine's coalescing queue
+            # included) without limit. Only frames the CURRENT watermark
+            # cannot release count toward the bound (a tracker that keeps
+            # up never trips it), and the check runs after buffering the
+            # chunk's frames but BEFORE the release — on overflow nothing
+            # has been popped, so no frame is ever dropped and the caller
+            # recovers by pushing the missing pose chunks (draining the
+            # queue bit-identically) before feeding more events.
+            if self.max_stalled is not None:
+                wm = self.pose_watermark
+                backlog = sum(1 for f in self._stalled if not f.t_mid < wm)
+                if backlog > self.max_stalled:
+                    raise PoseStallError(
+                        f"pose tracker too far behind the event front: "
+                        f"{backlog} frame(s) stalled past the watermark "
+                        f"exceeds max_stalled={self.max_stalled} (watermark "
+                        f"t={wm:.6g}, oldest stalled frame "
+                        f"t_mid={self.oldest_stalled_t:.6g}); the frames "
+                        f"are buffered — push the missing pose chunks to "
+                        f"drain the stall queue before feeding more events")
             return self._release()
         enforce_pose_span(self._traj_times_host, t_mid,
                           self.pose_extrapolation, context="frame mid-times")

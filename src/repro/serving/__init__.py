@@ -1,3 +1,4 @@
 """Serving substrate: prefill/decode LM engine with continuous batching
-(`engine`) and the streaming EMVS engine with double-buffered segment
-dispatch (`emvs_stream`)."""
+(`engine`) and the streaming EMVS engine with double-buffered,
+policy-scheduled segment dispatch (`emvs_stream`: latency / throughput /
+adaptive coalescing of closed segments into S buckets)."""

@@ -21,7 +21,18 @@ the paper's A/P/R pipelining applied across segments, structured like
     segment k+1 while segment k is still voting on the device; at most
     `max_inflight` sweeps run ahead before the engine blocks on the
     oldest (back-pressure), and frames behind the open segment are
-    evicted from the host window once dispatched.
+    evicted from the host window once dispatched;
+  * closed segments pass through a FIFO *coalescing queue* before
+    dispatch. `StreamConfig.dispatch_policy` decides how the queue
+    drains: "latency" dispatches every closed segment immediately as its
+    own sweep (the per-segment baseline), "throughput" holds segments
+    until the head group fills the largest S bucket, and "adaptive" (the
+    default) dispatches immediately while the in-flight queue is shallow
+    but coalesces queued segments into the largest fitting S bucket once
+    the device falls behind — burst-tolerant buffering between the
+    asynchronous front-end and the batch-parallel back-end. The queue
+    releases strictly FIFO (`repro.core.pipeline.dispatch_group_head`),
+    so the policy changes the dispatch schedule, never the results.
 
 S-axis padding repeats the last real segment; the per-segment sweep
 body is independent, so padded rows are discarded on harvest without
@@ -76,7 +87,7 @@ from repro.core.pipeline import (
     EMVSResult,
     SegmentPlanner,
     SegmentResult,
-    bucket_capacity,
+    dispatch_group_head,
     pad_segments,
     process_segments_batched,
 )
@@ -95,10 +106,49 @@ from repro.events.trajectory_stream import (
 
 Array = jax.Array
 
+# Dispatch policies for the closed-segment coalescing queue:
+#   * "latency"    — every closed segment dispatches immediately as its own
+#     sweep (smallest fitting S bucket). Lowest time-to-depth-map per
+#     segment; the per-segment baseline the other policies are measured
+#     against in benchmarks/streaming_latency.py.
+#   * "throughput" — closed segments coalesce until the head group fills
+#     the largest S bucket (or can no longer grow: a different-capacity
+#     segment queued behind it, or end of stream). Fewest dispatches and
+#     the biggest batches — the offline sweep's schedule, reconstructed
+#     online at the cost of first-depth latency.
+#   * "adaptive"   — never waits while the in-flight queue is shallow:
+#     whatever is queued dispatches at once (a lone closed segment goes
+#     solo, exactly like "latency" on a quiet stream; a backlog that
+#     piled up in one push coalesces into the largest fitting S bucket).
+#     Once the device saturates it holds segments like "throughput",
+#     coalescing them as soon as an in-flight slot frees. Burst-tolerant
+#     without giving up the quiet-stream latency profile; the default.
+DISPATCH_POLICIES = ("latency", "throughput", "adaptive")
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
-    """Knobs of the streaming engine (all shape-stability related)."""
+    """Knobs of the streaming engine.
+
+    Shape stability: `events_per_frame`, `segment_buckets` and the
+    `sweep` backend bound the compiled-variant count over an unbounded
+    stream. Scheduling: `dispatch_policy` picks how closed segments leave
+    the coalescing queue ("latency" = one sweep per segment, lowest
+    first-depth latency; "throughput" = fill the largest S bucket before
+    dispatching, highest sustained segments/s; "adaptive" = never wait
+    while the device keeps up — a lone closed segment dispatches solo, a
+    queued backlog coalesces — and hold-to-coalesce once the in-flight
+    queue saturates; pick it unless you need one extreme). Back-pressure:
+    `max_inflight` bounds device-side work in flight, and
+    `max_stalled_frames` bounds the pose-stall queue — with a stalled
+    tracker the event front would otherwise grow the stall queue (and the
+    coalescing queue behind it) without limit; exceeding the bound raises
+    `PoseStallError` after buffering the offending frames, so pushing the
+    missing pose chunks recovers without losing events. Every policy
+    produces bit-identical results on the nearest/integer datapaths
+    (tests/test_adaptive_dispatch.py) — these knobs trade latency for
+    throughput, never numerics.
+    """
 
     events_per_frame: int = EVENTS_PER_FRAME
     # Fixed segment-axis pad sizes (ascending). Groups larger than the top
@@ -107,7 +157,17 @@ class StreamConfig:
     segment_buckets: tuple[int, ...] = (1, 2, 4)
     # Double-buffer depth: sweeps allowed in flight before dispatch blocks
     # on the oldest. 2 = classic ping-pong (stage k+1 while k votes).
+    # Doubles as the adaptive policy's depth threshold: a dispatch that
+    # would exceed it switches the policy into coalescing mode.
     max_inflight: int = 2
+    # How the closed-segment coalescing queue drains (DISPATCH_POLICIES).
+    dispatch_policy: str = "adaptive"
+    # Max-stall back-pressure bound (pose-gated mode): maximum frames the
+    # aggregator may hold stalled past the pose watermark (unreleasable
+    # by the poses received so far) before `push` raises `PoseStallError`
+    # — frames are buffered first, so nothing is lost and pushing the
+    # missing pose chunks recovers. None = unbounded (trusted tracker).
+    max_stalled_frames: int | None = None
     # Segment-sweep backend: "batched" runs each dispatch as one lax.map
     # program (`process_segments_batched`); "sharded" shards the segment
     # axis across the devices of the engine's mesh
@@ -133,6 +193,14 @@ class StreamConfig:
                 f"{self.segment_buckets}")
         if self.max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if self.dispatch_policy not in DISPATCH_POLICIES:
+            raise ValueError(
+                f"unknown dispatch_policy {self.dispatch_policy!r}: "
+                f"expected one of {DISPATCH_POLICIES}")
+        if self.max_stalled_frames is not None and self.max_stalled_frames < 1:
+            raise ValueError(
+                f"max_stalled_frames must be >= 1 (or None for unbounded), "
+                f"got {self.max_stalled_frames}")
         if self.sweep not in ("batched", "sharded"):
             raise ValueError(
                 f"unknown sweep backend {self.sweep!r}: expected 'batched' "
@@ -280,21 +348,37 @@ class EMVSStreamEngine:
         if traj is None:
             traj = TrajectoryBuffer()
         self.pose_gated = isinstance(traj, TrajectoryBuffer)
+        if stream_cfg.max_stalled_frames is not None and not self.pose_gated:
+            raise ValueError(
+                "max_stalled_frames is only meaningful in pose-gated mode "
+                "(traj=None or a TrajectoryBuffer): a fully-known "
+                "Trajectory oracle never stalls frames, so the bound "
+                "would silently do nothing")
         self.aggregator = StreamingAggregator(
             cam, traj, stream_cfg.events_per_frame,
-            pose_extrapolation=stream_cfg.pose_extrapolation)
+            pose_extrapolation=stream_cfg.pose_extrapolation,
+            max_stalled=stream_cfg.max_stalled_frames)
         mean_depth = 0.5 * (dsi_cfg.z_min + dsi_cfg.z_max)
         # min_frames=2 is plan_segments' parallax filter, applied online.
         self.planner = SegmentPlanner(mean_depth * opts.keyframe_dist_frac,
                                       min_frames=2)
         self._store = _FrameStore()
+        self._pending: deque[tuple[int, int]] = deque()  # coalescing queue
         self._inflight: deque[_InFlight] = deque()
         self._fresh: list[SegmentResult] = []  # harvested, not yet polled
         self._done: dict[tuple[int, int], tuple[SegmentResult, PointCloud]] = {}
         self._flushed = False
         self._tail_flushed = False  # aggregator tail emitted (flush began)
+        # Counter invariants (asserted by tests/test_adaptive_dispatch.py):
+        # segments == sum of dispatched group sizes; coalesced_segments
+        # counts segments that left in a group of >= 2, so
+        # segments == coalesced_segments + (dispatches -
+        # coalesced_dispatches); pending_segments is the live coalescing
+        # queue depth (0 after flush), max_pending its high-water mark.
         self.stats = {"chunks": 0, "frames": 0, "segments": 0,
                       "dispatches": 0, "padded_segments": 0,
+                      "pending_segments": 0, "max_pending": 0,
+                      "coalesced_dispatches": 0, "coalesced_segments": 0,
                       "pose_chunks": 0, "stalled_frames": 0, "max_stalled": 0,
                       "pose_watermark": self.aggregator.pose_watermark}
 
@@ -314,8 +398,12 @@ class EMVSStreamEngine:
                 "push after flush: the event tail was already emitted "
                 "(only push_poses / finalize_poses / flush may follow)")
         self.stats["chunks"] += 1
-        self._ingest(self.aggregator.push(chunk))
-        self._track_stall()
+        try:
+            self._ingest(self.aggregator.push(chunk))
+        finally:
+            # runs on the PoseStallError (max-stall bound) path too, so
+            # max_stalled records the true peak, not the last quiet push
+            self._track_stall()
         return self.poll()
 
     def push_poses(self, chunk: Trajectory) -> list[SegmentResult]:
@@ -369,24 +457,67 @@ class EMVSStreamEngine:
             if seg is not None:
                 closed.append(seg)
         self._dispatch_all(closed)
-        # frames before the open segment can no longer be referenced
-        self._store.evict_before(self.planner.open_start)
 
-    # --- dispatch (double-buffered) --------------------------------------
+    # --- dispatch (double-buffered, policy-scheduled) ---------------------
 
     def _dispatch_all(self, closed: list[tuple[int, int]]) -> None:
-        """Group consecutive same-capacity segments; pad S to a bucket."""
-        i = 0
-        max_s = self._segment_buckets[-1]
-        while i < len(closed):
-            cap = bucket_capacity(closed[i][1] - closed[i][0])
-            j = i + 1
-            while (j < len(closed)
-                   and bucket_capacity(closed[j][1] - closed[j][0]) == cap):
-                j += 1
-            for off in range(i, j, max_s):
-                self._dispatch(closed[off:min(off + max_s, j)], cap)
-            i = j
+        """Queue newly closed segments; drain per the dispatch policy."""
+        self._pending.extend(closed)
+        self._note_queue_depth()
+        self._drain_pending(final=False)
+
+    def _note_queue_depth(self) -> None:
+        d = len(self._pending)
+        self.stats["pending_segments"] = d
+        self.stats["max_pending"] = max(self.stats["max_pending"], d)
+
+    def _harvest_ready(self) -> list[SegmentResult]:
+        """Pop and harvest every device-completed sweep at the head of the
+        in-flight queue (non-blocking, dispatch order)."""
+        out: list[SegmentResult] = []
+        while self._inflight and self._inflight[0].dms.depth.is_ready():
+            out.extend(self._harvest(self._inflight.popleft(), block=False))
+        return out
+
+    def _pop_group(self, final: bool) -> tuple[list[tuple[int, int]], int] | None:
+        """Pop the next dispatchable head group off the coalescing queue,
+        or None when the policy says to keep coalescing. Only the FIFO
+        head is ever eligible, so results release in segment-close order
+        under every policy."""
+        if not self._pending:
+            return None
+        policy = self.stream_cfg.dispatch_policy
+        n, cap, sealed = dispatch_group_head(self._pending,
+                                             self._segment_buckets[-1])
+        if policy == "latency":
+            n = 1  # one sweep per segment, always — the baseline schedule
+        elif policy == "throughput" and not (final or sealed):
+            return None  # the head group can still grow: keep coalescing
+        elif (policy == "adaptive" and not final
+              and len(self._inflight) >= self.stream_cfg.max_inflight):
+            return None  # device saturated: coalesce until a slot frees
+        return [self._pending.popleft() for _ in range(n)], cap
+
+    def _drain_pending(self, final: bool) -> None:
+        """Dispatch head groups while the policy allows. With `final`
+        (flush) every policy drains the whole queue — back-pressure
+        blocking in `_dispatch` paces the device."""
+        while self._pending:
+            if not final:
+                # harvest completed sweeps first: results surface sooner
+                # and the freed slots un-deepen the in-flight queue the
+                # adaptive policy reads
+                self._fresh.extend(self._harvest_ready())
+            group = self._pop_group(final)
+            if group is None:
+                break
+            self._dispatch(*group)
+            self._note_queue_depth()
+        # the retention window must cover segments still waiting in the
+        # coalescing queue, not just the planner's open segment: a queued
+        # head group references frames the planner already moved past
+        self._store.evict_before(self._pending[0][0] if self._pending
+                                 else self.planner.open_start)
 
     def _s_bucket(self, n: int) -> int:
         for b in self._segment_buckets:
@@ -426,6 +557,9 @@ class EMVSStreamEngine:
         self.stats["segments"] += len(segs)
         self.stats["dispatches"] += 1
         self.stats["padded_segments"] += s_pad - len(segs)
+        if len(segs) > 1:
+            self.stats["coalesced_dispatches"] += 1
+            self.stats["coalesced_segments"] += len(segs)
         while len(self._inflight) > self.stream_cfg.max_inflight:
             # back-pressure: block on the oldest sweep; its results are
             # queued for the caller's next poll
@@ -451,10 +585,13 @@ class EMVSStreamEngine:
 
     def poll(self) -> list[SegmentResult]:
         """Results that became ready since the last poll: back-pressure
-        harvests plus every in-flight sweep the device has finished."""
+        harvests plus every in-flight sweep the device has finished.
+        Freed in-flight slots let the coalescing queue drain, so a poll
+        can also dispatch segments the adaptive policy was holding."""
+        self._fresh.extend(self._harvest_ready())
+        self._drain_pending(final=False)
+        self._fresh.extend(self._harvest_ready())
         out, self._fresh = self._fresh, []
-        while self._inflight and self._inflight[0].dms.depth.is_ready():
-            out.extend(self._harvest(self._inflight.popleft(), block=False))
         return out
 
     def flush(self) -> EMVSResult:
@@ -470,10 +607,14 @@ class EMVSStreamEngine:
         not lost, but `push` is rejected from the first flush attempt on
         (the event tail was already emitted as a padded frame)."""
         if not self._flushed:
-            if not self._tail_flushed:
-                self._tail_flushed = True
-                self._ingest(self.aggregator.flush())
-            self._track_stall()
+            try:
+                if not self._tail_flushed:
+                    self._tail_flushed = True
+                    self._ingest(self.aggregator.flush())
+            finally:
+                # runs when the tail frame trips the max-stall bound too,
+                # so max_stalled records the true peak on the raise path
+                self._track_stall()
             stalled = self.aggregator.stalled_frames
             if stalled:
                 raise PoseStallError(
@@ -484,8 +625,11 @@ class EMVSStreamEngine:
                     f"missing pose chunks or call finalize_poses() first")
             tail = self.planner.flush()
             if tail is not None:
-                self._dispatch_all([tail])
+                self._pending.append(tail)
+                self._note_queue_depth()
             self._flushed = True
+        # end of stream: every policy drains the coalescing queue fully
+        self._drain_pending(final=True)
         while self._inflight:
             self._harvest(self._inflight.popleft(), block=True)
         self._fresh.clear()  # flush reports everything via result()

@@ -1,0 +1,431 @@
+"""Load-profile equivalence suite for the dispatch policies.
+
+The coalescing queue may reschedule closed segments — one sweep per
+segment ("latency"), largest-fitting-S-bucket batches ("throughput"),
+or depth-dependent switching ("adaptive") — but it may never change the
+numbers: for every policy x queue-depth profile (steady trickle, burst,
+starve-then-flood) x sweep backend, the streamed result must equal
+offline `run_emvs` bit-for-bit on the nearest/integer datapaths and to
+float tolerance on bilinear.
+
+Also pinned here:
+  * the coalescing planner's partition invariants (hypothesis: any
+    segment sequence, any gating policy -> valid S buckets, nothing
+    dropped, duplicated, or reordered across the FIFO release order);
+  * `_FrameStore` eviction and `PoseStallError` recovery under coalesced
+    dispatch (stalled frames never dispatch past the pose watermark; a
+    late pose chunk drains the coalesced queue bit-identically);
+  * the stats counters (queue depth, coalesce counts) reconciling with
+    the number of dispatches and segments across a stream;
+  * the aggregator's max-stall back-pressure bound (raise on a tracker
+    too far behind; recover without losing events).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dsi import DSIConfig
+from repro.core.pipeline import (
+    EMVSOptions,
+    bucket_capacity,
+    dispatch_group_head,
+    plan_dispatch_groups,
+    run_emvs,
+)
+from repro.events.aggregation import StreamingAggregator, aggregate
+from repro.events.simulator import EventStream
+from repro.events.trajectory_stream import PoseStallError
+from repro.serving.emvs_stream import (
+    DISPATCH_POLICIES,
+    EMVSStreamEngine,
+    StreamConfig,
+    iter_event_chunks,
+)
+from test_segment_batching import _assert_results_match
+
+EVENTS_PER_FRAME = 224  # does not divide the stream -> exercises the tail
+
+# Queue-depth profiles: how fast closed segments pile up in front of the
+# dispatcher. "trickle" pushes one frame of events at a time, so segments
+# close one by one and the in-flight queue stays shallow; "burst" pushes
+# the whole stream in a single chunk, closing every segment in one
+# planner pass; "starve_flood" starves a pose-gated engine of poses (all
+# frames stall, nothing may dispatch), then floods it with the entire
+# trajectory in one chunk — the stall queue drains into the coalescing
+# queue at once.
+LOAD_PROFILES = ("trickle", "burst", "starve_flood")
+
+GRID_OPTS = dict(formulation="matmul", voting="nearest", quantized=True,
+                 keyframe_dist_frac=0.03)
+BILINEAR_OPTS = dict(formulation="scatter", voting="bilinear",
+                     quantized=False, keyframe_dist_frac=0.03)
+
+
+@pytest.fixture(scope="module")
+def dispatch_scene(cam, small_scene):
+    """small_scene re-aggregated small enough that the 3-policy x
+    3-profile x 2-backend grid stays affordable, with a partial tail and
+    several same-capacity segments for the coalescer to batch."""
+    ev = small_scene["events"]
+    traj = small_scene["traj"]
+    n = int(ev.t.shape[0])
+    keep = min(n, 13 * EVENTS_PER_FRAME + 32)  # 13 full frames + a tail
+    ev = EventStream(xy=ev.xy[:keep], t=ev.t[:keep],
+                     polarity=ev.polarity[:keep], valid=ev.valid[:keep])
+    frames = aggregate(cam, ev, traj, events_per_frame=EVENTS_PER_FRAME)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=12, z_min=0.6, z_max=4.5)
+    refs = {
+        "nearest": run_emvs(cam, dsi_cfg, frames, EMVSOptions(**GRID_OPTS)),
+        "bilinear": run_emvs(cam, dsi_cfg, frames,
+                             EMVSOptions(**BILINEAR_OPTS)),
+    }
+    assert len(refs["nearest"].segments) >= 3, \
+        "scene must close several segments for coalescing to matter"
+    return ev, traj, refs, dsi_cfg
+
+
+def _drive(engine: EMVSStreamEngine, ev: EventStream, traj, profile: str):
+    """Run one stream under the given queue-depth profile and flush."""
+    if profile == "trickle":
+        for c in iter_event_chunks(ev, EVENTS_PER_FRAME):
+            engine.push(c)
+    elif profile == "burst":
+        engine.push(next(iter_event_chunks(ev, int(ev.t.shape[0]))))
+    elif profile == "starve_flood":
+        for c in iter_event_chunks(ev, 997):
+            engine.push(c)  # starve: no poses, every frame stalls
+        engine.push_poses(traj)  # flood: one chunk releases everything
+        engine.finalize_poses()
+    else:
+        raise AssertionError(f"unknown profile {profile}")
+    return engine.flush()
+
+
+def _make_engine(cam, dsi_cfg, traj, opts, profile, policy, sweep):
+    pose_gated = profile == "starve_flood"
+    return EMVSStreamEngine(
+        cam, dsi_cfg, None if pose_gated else traj, EMVSOptions(**opts),
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                     dispatch_policy=policy, sweep=sweep))
+
+
+def _assert_stats_reconcile(stats: dict, n_segments: int) -> None:
+    """The counter identities every stream must satisfy after flush:
+    each dispatched group is either solo or coalesced, groups partition
+    the segments, and the coalescing queue has fully drained."""
+    solo = stats["dispatches"] - stats["coalesced_dispatches"]
+    assert solo >= 0
+    assert stats["segments"] == stats["coalesced_segments"] + solo, stats
+    assert stats["segments"] == n_segments
+    assert stats["coalesced_segments"] >= 2 * stats["coalesced_dispatches"]
+    assert stats["pending_segments"] == 0, "coalescing queue not drained"
+    assert stats["max_pending"] >= 0
+
+
+# --- the headline grid ----------------------------------------------------
+
+
+@pytest.mark.parametrize("sweep", ("batched", "sharded"))
+@pytest.mark.parametrize("profile", LOAD_PROFILES)
+@pytest.mark.parametrize("policy", DISPATCH_POLICIES)
+def test_policy_profile_backend_bitwise(cam, dispatch_scene, policy, profile,
+                                        sweep):
+    """Every policy x load profile x backend reproduces offline run_emvs
+    bit-for-bit on the nearest/integer datapath: the dispatch schedule
+    may change, the numbers may not."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    ref = refs["nearest"]
+    engine = _make_engine(cam, dsi_cfg, traj, GRID_OPTS, profile, policy,
+                          sweep)
+    res = _drive(engine, ev, traj, profile)
+    _assert_results_match(res, ref, exact_dsi=True)
+    _assert_stats_reconcile(engine.stats, len(ref.segments))
+
+
+@pytest.mark.parametrize("policy", DISPATCH_POLICIES)
+def test_policy_bilinear_allclose(cam, dispatch_scene, policy):
+    """Bilinear voting accumulates float weights, so policies must agree
+    with offline to float tolerance (burst maximizes coalescing)."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    engine = _make_engine(cam, dsi_cfg, traj, BILINEAR_OPTS, "burst", policy,
+                          "batched")
+    res = _drive(engine, ev, traj, "burst")
+    _assert_results_match(res, refs["bilinear"], exact_dsi=False)
+
+
+# --- schedule shape: the policies do what they claim ----------------------
+
+
+def test_latency_policy_dispatches_per_segment(cam, dispatch_scene):
+    """The per-segment baseline: one dispatch per segment, never a
+    coalesced batch, regardless of how many segments a push closes."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    engine = _make_engine(cam, dsi_cfg, traj, GRID_OPTS, "burst", "latency",
+                          "batched")
+    _drive(engine, ev, traj, "burst")
+    assert engine.stats["dispatches"] == engine.stats["segments"]
+    assert engine.stats["coalesced_dispatches"] == 0
+    assert engine.stats["coalesced_segments"] == 0
+
+
+@pytest.mark.parametrize("profile", LOAD_PROFILES)
+def test_throughput_policy_matches_planner_partition(cam, dispatch_scene,
+                                                     profile):
+    """The throughput schedule is exactly `plan_dispatch_groups` over the
+    full closed-segment sequence, for every load profile: deferring an
+    unsealed head group until it can no longer grow reproduces the
+    offline partition online."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    segs = [s.frame_range for s in refs["nearest"].segments]
+    scfg = StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                        dispatch_policy="throughput")
+    groups = plan_dispatch_groups(segs, scfg.segment_buckets[-1])
+    engine = _make_engine(cam, dsi_cfg, traj, GRID_OPTS, profile,
+                          "throughput", "batched")
+    _drive(engine, ev, traj, profile)
+    assert engine.stats["dispatches"] == len(groups)
+    coalesced = [g for g, _ in groups if len(g) > 1]
+    assert engine.stats["coalesced_dispatches"] == len(coalesced)
+    assert engine.stats["coalesced_segments"] == sum(map(len, coalesced))
+
+
+def test_burst_coalesces_under_adaptive_and_throughput(cam, dispatch_scene):
+    """A burst must actually exercise the coalescing path: with every
+    segment closing in one planner pass, throughput (always) and
+    adaptive (once the in-flight queue saturates) dispatch batched
+    groups, and the queue's high-water mark shows segments waited."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    segs = [s.frame_range for s in refs["nearest"].segments]
+    groups = plan_dispatch_groups(segs, StreamConfig().segment_buckets[-1])
+    if not any(len(g) > 1 for g, _ in groups):
+        pytest.skip("scene closed no coalescible run (fixture guards this)")
+    for policy in ("throughput", "adaptive"):
+        engine = _make_engine(cam, dsi_cfg, traj, GRID_OPTS, "burst", policy,
+                              "batched")
+        _drive(engine, ev, traj, "burst")
+        assert engine.stats["max_pending"] >= 2, (
+            f"{policy}: burst never deepened the coalescing queue")
+        assert engine.stats["dispatches"] < engine.stats["segments"], (
+            f"{policy}: burst dispatched per-segment, nothing coalesced")
+        assert engine.stats["coalesced_dispatches"] >= 1
+
+
+# --- stall x coalescing: frames never dispatch past the watermark ---------
+
+
+def test_stalled_frames_never_reach_coalescing_queue(cam, dispatch_scene):
+    """Pose-starved frames stall upstream of the planner: neither the
+    coalescing queue nor the dispatcher may see a frame whose pose is
+    past the watermark, under any policy."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    for policy in DISPATCH_POLICIES:
+        engine = _make_engine(cam, dsi_cfg, traj, GRID_OPTS, "starve_flood",
+                              policy, "batched")
+        for c in iter_event_chunks(ev, 997):
+            engine.push(c)
+        assert engine.stats["dispatches"] == 0, policy
+        assert engine.stats["pending_segments"] == 0, (
+            f"{policy}: unposed frames leaked into the coalescing queue")
+        assert engine.stats["max_pending"] == 0, policy
+        assert engine.aggregator.stalled_frames > 0
+        engine.push_poses(traj)
+        engine.finalize_poses()
+        engine.flush()
+
+
+def test_stall_recovery_drains_coalesced_queue_bitwise(cam, dispatch_scene):
+    """flush with poses missing raises PoseStallError without dispatching
+    anything; the late pose chunk then drains the whole coalesced
+    backlog bit-identically, and the frame store's eviction window ends
+    exactly at the open segment (no underflow through the burst)."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    ref = refs["nearest"]
+    engine = _make_engine(cam, dsi_cfg, traj, GRID_OPTS, "starve_flood",
+                          "throughput", "batched")
+    for c in iter_event_chunks(ev, 997):
+        engine.push(c)
+    with pytest.raises(PoseStallError):
+        engine.flush()
+    assert engine.stats["dispatches"] == 0, (
+        "a failed flush must not dispatch stalled frames")
+    engine.push_poses(traj)  # late chunk: releases the whole backlog
+    engine.finalize_poses()
+    res = engine.flush()
+    _assert_results_match(res, ref, exact_dsi=True)
+    _assert_stats_reconcile(engine.stats, len(ref.segments))
+    # eviction ran through the released backlog without underflow
+    assert engine._store.base == engine.planner.open_start
+    assert engine._store.base <= engine._store.end
+
+
+# --- max-stall back-pressure ----------------------------------------------
+
+
+def test_max_stall_bound_raises_and_recovers_bitwise(cam, dispatch_scene):
+    """With `max_stalled_frames` set, an event front outrunning the
+    tracker raises PoseStallError mid-stream; the stalled frames stay
+    buffered, so pushing the missing poses and resuming the event stream
+    finishes bit-identical to offline."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    ref = refs["nearest"]
+    bound = 3
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, None, EMVSOptions(**GRID_OPTS),
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                     dispatch_policy="adaptive", max_stalled_frames=bound))
+    chunks = list(iter_event_chunks(ev, 997))
+    resume_from = None
+    for i, c in enumerate(chunks):
+        try:
+            engine.push(c)
+        except PoseStallError as err:
+            assert f"max_stalled={bound}" in str(err)
+            resume_from = i + 1
+            break
+    assert resume_from is not None, (
+        f"{len(chunks)} pose-less chunks never tripped the {bound}-frame "
+        f"stall bound")
+    # the failed push still recorded the true stall peak (the raise must
+    # not skip the stats update — max_stalled is exported by benchmarks)
+    assert engine.stats["max_stalled"] > bound
+    assert engine.stats["stalled_frames"] == engine.aggregator.stalled_frames
+    # the offending chunk's frames were buffered, not dropped: poses
+    # drain the stall queue and the stream resumes where it left off
+    engine.push_poses(traj)
+    assert engine.aggregator.stalled_frames <= bound
+    for c in chunks[resume_from:]:
+        engine.push(c)
+    engine.finalize_poses()
+    res = engine.flush()
+    _assert_results_match(res, ref, exact_dsi=True)
+    _assert_stats_reconcile(engine.stats, len(ref.segments))
+
+
+def test_flush_tripping_stall_bound_still_updates_stats(cam, dispatch_scene):
+    """The tail frame emitted by flush() can itself trip the max-stall
+    bound; the raise must not leave the engine's stall stats stale."""
+    ev, traj, refs, dsi_cfg = dispatch_scene
+    n_frames = int(ev.t.shape[0]) // EVENTS_PER_FRAME
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, None, EMVSOptions(**GRID_OPTS),
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                     max_stalled_frames=n_frames))  # full frames fit exactly
+    for c in iter_event_chunks(ev, int(ev.t.shape[0])):
+        engine.push(c)
+    assert engine.stats["max_stalled"] == n_frames
+    with pytest.raises(PoseStallError, match=f"max_stalled={n_frames}"):
+        engine.flush()  # the padded tail frame overflows the bound
+    assert engine.stats["max_stalled"] == n_frames + 1, (
+        "the failed flush must record the true stall peak")
+    assert engine.stats["stalled_frames"] == n_frames + 1
+    # recovery is unchanged: poses release everything, results bitwise
+    engine.push_poses(traj)
+    engine.finalize_poses()
+    res = engine.flush()
+    _assert_results_match(res, refs["nearest"], exact_dsi=True)
+
+
+def test_max_stall_bound_validation(cam, dispatch_scene):
+    _, traj, _, dsi_cfg = dispatch_scene
+    with pytest.raises(ValueError, match="max_stalled_frames"):
+        StreamConfig(max_stalled_frames=0)
+    with pytest.raises(ValueError, match="max_stalled"):
+        StreamingAggregator(cam, traj, 64, max_stalled=-1)
+    with pytest.raises(ValueError, match="dispatch_policy"):
+        StreamConfig(dispatch_policy="asap")
+    # the bound is pose-gated-only: a Trajectory oracle never stalls, so
+    # accepting it would make the flag a silent no-op
+    with pytest.raises(ValueError, match="pose-gated"):
+        EMVSStreamEngine(cam, dsi_cfg, traj,
+                         stream_cfg=StreamConfig(max_stalled_frames=4))
+    with pytest.raises(ValueError, match="TrajectoryBuffer"):
+        StreamingAggregator(cam, traj, 64, max_stalled=4)
+
+
+# --- the coalescing planner (pure, host-side) -----------------------------
+
+
+def _random_segments(rng: np.random.Generator, n: int) -> list[tuple[int, int]]:
+    """n consecutive closed segments with random lengths (1..13 frames),
+    the shape the planner emits: half-open, abutting, ascending."""
+    lens = rng.integers(1, 14, size=n)
+    starts = np.concatenate([[0], np.cumsum(lens)])
+    return [(int(starts[i]), int(starts[i + 1])) for i in range(n)]
+
+
+def test_dispatch_group_head_basics():
+    # run capped by max_group; sealed by cap change or full group
+    segs = [(0, 2), (2, 4), (4, 8), (8, 13)]  # caps 4, 4, 4, 8
+    assert dispatch_group_head(segs, 4) == (3, 4, True)  # sealed by (8,13)
+    assert dispatch_group_head(segs, 2) == (2, 4, True)  # sealed: full
+    assert dispatch_group_head(segs[:2], 4) == (2, 4, False)  # can grow
+    assert dispatch_group_head(segs[3:], 4) == (1, 8, False)
+    with pytest.raises(ValueError, match="non-empty"):
+        dispatch_group_head([], 4)
+    with pytest.raises(ValueError, match="max_group"):
+        dispatch_group_head(segs, 0)
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 40),
+       max_group=st.sampled_from([1, 2, 3, 4, 8]))
+def test_plan_dispatch_groups_is_valid_partition(seed, n, max_group):
+    """Any segment sequence partitions into valid S buckets: groups
+    concatenate back to the input (no drop/dup/reorder), each group
+    holds 1..max_group segments of one shared capacity, and a group only
+    ends because it was full or the capacity changed (maximality)."""
+    rng = np.random.default_rng(seed)
+    segs = _random_segments(rng, n)
+    groups = plan_dispatch_groups(segs, max_group)
+    flat = [s for g, _ in groups for s in g]
+    assert flat == segs
+    for g, cap in groups:
+        assert 1 <= len(g) <= max_group
+        assert all(bucket_capacity(e - s) == cap for s, e in g)
+    for (g1, c1), (_, c2) in zip(groups, groups[1:]):
+        assert len(g1) == max_group or c1 != c2, (
+            "planner split a growable same-capacity run")
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 24),
+       gates=st.lists(st.booleans(), max_size=80))
+def test_fifo_release_under_arbitrary_dispatch_gating(seed, n, gates):
+    """Model EVERY dispatch policy as an arbitrary gate sequence over the
+    coalescing queue (dispatch-the-head-group vs keep-coalescing,
+    interleaved with arrivals): whatever the gating, the released groups
+    are valid S buckets and concatenate to the arrival order — segments
+    are never dropped, duplicated, or reordered across FIFO release."""
+    rng = np.random.default_rng(seed)
+    segs = _random_segments(rng, n)
+    max_group = 4
+    pending: deque[tuple[int, int]] = deque()
+    arrived: list[tuple[int, int]] = []
+    released: list[list[tuple[int, int]]] = []
+    it = iter(segs)
+    for open_gate in gates:
+        if open_gate and pending:
+            k, cap, _ = dispatch_group_head(pending, max_group)
+            g = [pending.popleft() for _ in range(k)]
+            assert all(bucket_capacity(e - s) == cap for s, e in g)
+            released.append(g)
+        else:
+            nxt = next(it, None)
+            if nxt is not None:
+                pending.append(nxt)
+                arrived.append(nxt)
+    for nxt in it:  # remaining arrivals
+        pending.append(nxt)
+        arrived.append(nxt)
+    while pending:  # final drain (flush)
+        k, cap, _ = dispatch_group_head(pending, max_group)
+        g = [pending.popleft() for _ in range(k)]
+        assert all(bucket_capacity(e - s) == cap for s, e in g)
+        released.append(g)
+    assert [s for g in released for s in g] == arrived == segs
+    assert all(1 <= len(g) <= max_group for g in released)

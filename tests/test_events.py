@@ -98,6 +98,61 @@ def test_streaming_aggregator_carries_remainder(cam, small_scene):
         np.asarray(ref.poses.t))
 
 
+def test_aggregator_max_stall_backpressure(cam, small_scene):
+    """Pose-gated mode with `max_stalled`: a push that leaves more than
+    the bound stalled raises PoseStallError AFTER buffering the frames,
+    so nothing is lost and pushing the poses drains bit-identically."""
+    from repro.events.aggregation import PoseStallError, TrajectoryBuffer
+
+    ev, traj = small_scene["events"], small_scene["traj"]
+    ref = small_scene["frames"]
+    e, bound = 1024, 2
+    agg = StreamingAggregator(cam, TrajectoryBuffer(), events_per_frame=e,
+                              max_stalled=bound)
+    n = (bound + 2) * e  # enough events to overflow the bound in one push
+    chunk = EventStream(xy=ev.xy[:n], t=ev.t[:n],
+                        polarity=ev.polarity[:n], valid=ev.valid[:n])
+    with pytest.raises(PoseStallError, match=f"max_stalled={bound}"):
+        agg.push(chunk)
+    # every completed frame was buffered before the raise: the late pose
+    # chunk releases them all, posed bit-identically to the offline path
+    assert agg.stalled_frames == bound + 2
+    released = agg.push_poses(traj)
+    assert agg.stalled_frames == 0
+    np.testing.assert_array_equal(np.asarray(released.xy),
+                                  np.asarray(ref.xy[:bound + 2]))
+    np.testing.assert_array_equal(np.asarray(released.poses.t),
+                                  np.asarray(ref.poses.t[:bound + 2]))
+    # drained below the bound: the event stream may resume
+    agg.push(EventStream(xy=ev.xy[n:n + e], t=ev.t[n:n + e],
+                         polarity=ev.polarity[n:n + e],
+                         valid=ev.valid[n:n + e]))
+    with pytest.raises(ValueError, match="max_stalled"):
+        StreamingAggregator(cam, TrajectoryBuffer(), max_stalled=0)
+
+    # Only frames the current watermark CANNOT release count toward the
+    # bound, and the check precedes the release: a push whose backlog
+    # fits must return the releasable frames (not raise, not drop them).
+    from repro.events.simulator import slice_trajectory
+
+    agg2 = StreamingAggregator(cam, TrajectoryBuffer(), events_per_frame=e,
+                               max_stalled=bound)
+    t_mid_all = np.asarray(ref.t_mid)
+    times = np.asarray(traj.times)
+    # poses covering the first 3 frame mid-times strictly
+    hi = int(np.searchsorted(times, t_mid_all[2], side="right")) + 1
+    agg2.push_poses(slice_trajectory(traj, 0, hi))
+    wm = agg2.pose_watermark
+    releasable = int((t_mid_all[:bound + 2] < wm).sum())
+    assert releasable >= 3 and (bound + 2) - releasable <= bound, \
+        "fixture: the backlog must fit the bound for this scenario"
+    released = agg2.push(chunk)  # same 4 frames as above — no raise now
+    assert released.xy.shape[0] == releasable
+    np.testing.assert_array_equal(np.asarray(released.poses.t),
+                                  np.asarray(ref.poses.t[:releasable]))
+    assert agg2.stalled_frames == (bound + 2) - releasable
+
+
 def test_aggregate_empty_stream(cam, small_scene):
     traj = small_scene["traj"]
     ev = EventStream(xy=jnp.zeros((0, 2)), t=jnp.zeros((0,)),
