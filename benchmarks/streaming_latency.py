@@ -44,6 +44,25 @@ sustained segments/s falls below min_ratio x the per-segment
 ("latency") baseline — strict on full-size runs, a loose crash barrier
 on the sub-second smoke, whose timings jitter ~10% even idle.
 
+Fourth axis: the MULTI-STREAM SWEEP ("multi_stream_sweep" section). N
+identical trickle sessions stream through ONE `MultiStreamEngine`
+(shared `SweepDispatcher`) and through N dedicated single-stream
+engines; both run the "throughput" policy so the dispatch schedule is
+load-shaped, not timing-shaped. Reported per arrangement: aggregate
+(sessions x segments)/s, per-session p99 first-depth latency, dispatch
+counts, and the coalesced-bucket FILL RATE (real segment rows / total
+rows incl. S-axis padding) — cross-stream coalescing packs
+shape-compatible segments from different sessions into one bucket, so
+the multi engine must fill buckets the dedicated engines pad. Its
+REGRESSION GATE is purely structural (dispatch counters, no timing):
+the shared dispatcher must issue at least one cross-stream group and
+strictly fewer total dispatches than the N dedicated engines combined.
+The run picks an S bucket that does not divide the per-session segment
+count, which makes the reduction a load-shape invariant rather than a
+lucky draw. Every session's result is asserted bitwise-equal to
+offline. `ci.yml` re-applies both this gate and the dispatch-policy
+gate from the persisted artifact.
+
     PYTHONPATH=src python benchmarks/streaming_latency.py [--dry-run]
 """
 from __future__ import annotations
@@ -79,6 +98,7 @@ from repro.events.simulator import (
 )
 from repro.serving.emvs_stream import (
     EMVSStreamEngine,
+    MultiStreamEngine,
     StreamConfig,
     iter_event_chunks,
 )
@@ -243,6 +263,114 @@ def dispatch_policy_sweep(cam, dsi_cfg, traj, ev, opts, e_frame, frames,
     return rows
 
 
+def multi_stream_sweep(cam, dsi_cfg, traj, ev, opts, e_frame, frames,
+                       ref, n_sessions: int) -> dict:
+    """N concurrent trickle streams: one shared dispatcher vs N dedicated
+    engines. Structural comparison — the "throughput" policy makes the
+    dispatch schedule a function of load shape alone, so the gate
+    (cross-stream coalescing must cut the dispatch count) is
+    deterministic. Timings ride along as reporting, not as the gate."""
+    segs = plan_segments(frames, dsi_cfg, opts)
+    n_ref = len(ref.segments)
+    # Pick the top S bucket so it does NOT divide the per-session segment
+    # count: if it did, every same-capacity run could fill buckets exactly
+    # and the dedicated engines would tie the shared dispatcher by luck of
+    # the load shape. With S % top != 0 some run leaves a partial bucket,
+    # which only cross-stream coalescing can fill — the reduction the gate
+    # asserts becomes an invariant of the arrangement. (S cannot be
+    # divisible by all of 4, 3, 5 and 7 below ~400 segments.)
+    top = next(b for b in (4, 3, 5, 7) if n_ref % b != 0)
+    scfg = StreamConfig(events_per_frame=e_frame,
+                        dispatch_policy="throughput",
+                        segment_buckets=(1, 2, top) if top > 2 else (1, 2))
+    _precompile_variants(cam, dsi_cfg, frames, segs, opts, scfg)
+    chunk_events = e_frame
+
+    # --- N dedicated single-stream engines (run back-to-back, warm) ----
+    ded_stats: list[dict] = []
+    ded_p99: list[float] = []
+    t_ded = 0.0
+    for i in range(n_sessions):
+        res, t_total, timeline, stats = _stream_policy_once(
+            cam, dsi_cfg, traj, ev, opts, scfg, chunk_events)
+        _assert_bitwise(res, ref, f"dedicated[{i}]")
+        lat = np.asarray([t for t, _ in timeline], np.float64)
+        ded_p99.append(float(np.percentile(lat, 99)))
+        ded_stats.append(stats)
+        t_ded += t_total
+
+    # --- one MultiStreamEngine, lockstep round-robin interleave --------
+    engine = MultiStreamEngine(cam, dsi_cfg, opts, scfg)
+    handles = [engine.add_session(traj=traj) for _ in range(n_sessions)]
+    times: dict[str, list[float]] = {h.session_id: [] for h in handles}
+    t0 = time.perf_counter()
+    for chunk in iter_event_chunks(ev, chunk_events):
+        for h in handles:
+            for _seg in h.push(chunk):
+                times[h.session_id].append(time.perf_counter() - t0)
+    for h in handles:
+        res = h.flush()
+        t_now = time.perf_counter() - t0
+        _assert_bitwise(res, ref, f"multi session {h.session_id}")
+        # segments drained by this flush complete at flush time
+        times[h.session_id] += \
+            [t_now] * (len(res.segments) - len(times[h.session_id]))
+    t_multi = time.perf_counter() - t0
+    d = engine.stats["dispatcher"]
+    assert d["pending_segments"] == 0, "multi engine left work queued"
+
+    def _fill(seg_total: int, padded: int) -> float:
+        return seg_total / (seg_total + padded) if seg_total + padded else 1.0
+
+    multi_p99 = {sid: round(float(np.percentile(np.asarray(ts), 99)), 3)
+                 for sid, ts in times.items()}
+    dedicated = {
+        "dispatches": sum(s["dispatches"] for s in ded_stats),
+        "padded_segments": sum(s["padded_segments"] for s in ded_stats),
+        "segments": sum(s["segments"] for s in ded_stats),
+        "aggregate_segments_per_s": round(n_sessions * n_ref / t_ded, 3),
+        "end_to_end_s": round(t_ded, 3),
+        "per_session_p99_s": [round(p, 3) for p in ded_p99],
+    }
+    dedicated["bucket_fill_rate"] = round(
+        _fill(dedicated["segments"], dedicated["padded_segments"]), 4)
+    multi = {
+        "dispatches": int(d["dispatches"]),
+        "padded_segments": int(d["padded_segments"]),
+        "segments": int(d["segments"]),
+        "cross_stream_dispatches": int(d["cross_stream_dispatches"]),
+        "coalesced_dispatches": int(d["coalesced_dispatches"]),
+        "aggregate_segments_per_s": round(n_sessions * n_ref / t_multi, 3),
+        "end_to_end_s": round(t_multi, 3),
+        "per_session_p99_s": multi_p99,
+        "bucket_fill_rate": round(_fill(int(d["segments"]),
+                                        int(d["padded_segments"])), 4),
+    }
+    record = {
+        "sessions": n_sessions,
+        "segments_per_session": n_ref,
+        "segment_buckets": list(scfg.segment_buckets),
+        "policy": "throughput",
+        "multi": multi,
+        "dedicated": dedicated,
+    }
+    print(f"\nmulti-stream sweep ({n_sessions} trickle sessions x "
+          f"{n_ref} segments, policy=throughput, "
+          f"buckets {scfg.segment_buckets}):")
+    print(f"{'arrangement':<14}{'agg seg/s':>10}{'p99 s':>8}"
+          f"{'dispatches':>11}{'fill rate':>10}{'cross':>7}")
+    print(f"{'dedicated xN':<14}{dedicated['aggregate_segments_per_s']:>10.2f}"
+          f"{max(ded_p99):>8.3f}{dedicated['dispatches']:>11d}"
+          f"{dedicated['bucket_fill_rate']:>10.3f}{'-':>7}")
+    print(f"{'multi-stream':<14}{multi['aggregate_segments_per_s']:>10.2f}"
+          f"{max(multi_p99.values()):>8.3f}{multi['dispatches']:>11d}"
+          f"{multi['bucket_fill_rate']:>10.3f}"
+          f"{multi['cross_stream_dispatches']:>7d}")
+    print(f"OK: all {n_sessions} multi-stream sessions are bitwise-equal "
+          f"to offline")
+    return record
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
@@ -359,6 +487,13 @@ def main() -> None:
         "gate": gate,
     }, path=args.json_out)
 
+    # --- multi-stream sweep: shared dispatcher vs N dedicated engines -----
+    multi_rec = multi_stream_sweep(cam, dsi_cfg, traj, ev, opts, e_frame,
+                                   frames, ref,
+                                   n_sessions=3 if args.dry_run else 4)
+    multi_rec["dry_run"] = bool(args.dry_run)
+    update_bench_json("multi_stream_sweep", multi_rec, path=args.json_out)
+
     path = update_bench_json("streaming_latency", {
         "dry_run": bool(args.dry_run),
         "events": n_events,
@@ -394,6 +529,24 @@ def main() -> None:
           f"{gate['adaptive_segments_per_s']:.2f} segments/s vs the "
           f"per-segment baseline {gate['latency_segments_per_s']:.2f} "
           f"(min ratio {gate['min_ratio']:g})")
+
+    # multi-stream gate: structural like the coalescing gate above —
+    # dispatch counters, never timings, so CI noise cannot flip it
+    m, ded = multi_rec["multi"], multi_rec["dedicated"]
+    assert m["cross_stream_dispatches"] >= 1, (
+        f"REGRESSION: the shared dispatcher never issued a cross-stream "
+        f"group over {multi_rec['sessions']} concurrent trickle sessions "
+        f"— cross-stream coalescing is dead")
+    assert m["dispatches"] < ded["dispatches"], (
+        f"REGRESSION: cross-stream coalescing stopped reducing dispatches "
+        f"({m['dispatches']} shared vs {ded['dispatches']} across "
+        f"{multi_rec['sessions']} dedicated engines)")
+    print(f"OK: cross-stream coalescing cuts dispatches "
+          f"{ded['dispatches']} -> {m['dispatches']} across "
+          f"{multi_rec['sessions']} sessions "
+          f"({m['cross_stream_dispatches']} cross-stream groups, bucket "
+          f"fill rate {ded['bucket_fill_rate']:.3f} -> "
+          f"{m['bucket_fill_rate']:.3f})")
 
 
 if __name__ == "__main__":

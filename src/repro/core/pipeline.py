@@ -43,10 +43,18 @@ unbounded stream. The engine's coalescing dispatcher groups queued
 closed segments with `dispatch_group_head` / `plan_dispatch_groups`
 (below): FIFO-order partitioning into same-capacity runs of at most one
 S bucket each, so a dispatch policy can trade latency for batch size
-without touching the numbers. Per-segment outputs are bit-identical to
-`run_emvs` on the integer/nearest datapaths for every chunking of the
-input and every dispatch policy (tests/test_streaming.py,
-tests/test_adaptive_dispatch.py).
+without touching the numbers. The multi-tenant serving layer
+(`repro.serving.sweep_dispatcher.SweepDispatcher`) generalizes both to
+`(session, segment)`-tagged work via `dispatch_group_head_tagged` /
+`plan_dispatch_groups_tagged`: per-stream FIFO is preserved while
+shape-compatible segments from different sessions fill one S bucket
+(`pad_segment_rows` gathers such cross-store groups), under a
+FAIRNESS_POLICIES anchor rule (strict "fifo" vs starvation-bounded
+"round_robin"). Per-segment outputs are bit-identical to `run_emvs` on
+the integer/nearest datapaths for every chunking of the input, every
+dispatch policy, and every session interleaving
+(tests/test_streaming.py, tests/test_adaptive_dispatch.py,
+tests/test_multi_stream.py).
 """
 from __future__ import annotations
 
@@ -74,6 +82,19 @@ Array = jax.Array
 # Smallest fixed segment capacity: keeping a floor bounds the number of
 # distinct compiled bucket shapes for trajectories with many tiny segments.
 SEGMENT_BUCKET_MIN = 4
+
+# Fairness policies for the TAGGED coalescing queue (multi-tenant serving):
+#   * "fifo"        — every dispatch group anchors at the global queue head:
+#     strict arrival order across streams. One stream's odd-capacity segment
+#     can head-of-line delay the others (their shape-compatible segments
+#     still ride along behind it, but a group never *anchors* past the head).
+#   * "round_robin" — group anchors rotate over the streams in first-seen
+#     order, skipping streams with nothing queued: a stream with queued work
+#     is anchored again within at most (#streams) dispatches, so no stream
+#     waits more than O(streams) dispatches behind a chatty neighbor.
+#     Starvation-bounded; the property tests in tests/test_multi_stream.py
+#     pin the bound.
+FAIRNESS_POLICIES = ("fifo", "round_robin")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,22 +258,72 @@ def dispatch_group_head(segs: Sequence[tuple[int, int]], max_group: int,
     coalescer may keep an unsealed group waiting for more segments, but a
     sealed one gains nothing by waiting.
 
-    One SegmentBatch carries a single frame capacity, and streamed
-    results must release in segment-close (FIFO) order, so only the head
-    of the queue is ever eligible — a group never skips past a
-    different-capacity segment queued ahead of it.
+    One SegmentBatch carries a single frame capacity, and a single
+    stream's results must release in segment-close (FIFO) order, so only
+    the head of the queue is ever eligible — a group never skips past a
+    different-capacity segment queued ahead of it. (Implemented as the
+    single-tag case of `dispatch_group_head_tagged`, where the group is
+    always a queue prefix.)
     """
-    if not segs:
+    indices, cap, sealed = dispatch_group_head_tagged(
+        [(None, seg) for seg in segs], max_group, minimum)
+    return len(indices), cap, sealed
+
+
+def dispatch_group_head_tagged(queue: Sequence[tuple[Any, tuple[int, int]]],
+                               max_group: int,
+                               minimum: int = SEGMENT_BUCKET_MIN, *,
+                               anchor: int = 0
+                               ) -> tuple[list[int], int, bool]:
+    """Head group of a TAGGED coalescing queue: `(indices, capacity, sealed)`.
+
+    `queue` holds `(tag, (start, end))` work items in arrival order — the
+    tag names the stream/session that closed the segment, so one queue can
+    multiplex N cameras onto shared device sweeps. The group is anchored
+    at `queue[anchor]` (which must be its own tag's oldest queued segment)
+    and collects up to `max_group` members of the anchor's
+    `bucket_capacity` by walking the queue forward under the per-stream
+    FIFO rule: skipping an item blocks every later item of the same tag.
+    A stream's results therefore always release in its own close order,
+    while OTHER streams' shape-compatible segments may overtake a blocked
+    neighbor and fill the S bucket — the cross-stream coalescing the
+    multi-tenant engine is built on.
+
+    Returns queue indices (ascending, starting at `anchor`), the shared
+    frame capacity, and `sealed` with its `dispatch_group_head` meaning:
+    the group can never grow (it is full, or some queued segment was left
+    behind). With one tag and `anchor=0` this reduces exactly to the
+    untagged head group.
+    """
+    if not queue:
         raise ValueError("dispatch_group_head needs a non-empty queue")
     if max_group < 1:
         raise ValueError(f"max_group must be >= 1, got {max_group}")
-    cap = bucket_capacity(segs[0][1] - segs[0][0], minimum)
-    n = 1
-    while (n < len(segs) and n < max_group
-           and bucket_capacity(segs[n][1] - segs[n][0], minimum) == cap):
-        n += 1
-    sealed = n == max_group or n < len(segs)
-    return n, cap, sealed
+    if not 0 <= anchor < len(queue):
+        raise ValueError(
+            f"anchor {anchor} outside queue of {len(queue)} item(s)")
+    tag0, (s0, e0) = queue[anchor]
+    blocked = set()
+    for j in range(anchor):
+        tag, _ = queue[j]
+        if tag == tag0:
+            raise ValueError(
+                "anchor must be its tag's oldest queued segment: anchoring "
+                f"at index {anchor} would overtake an earlier segment of "
+                "the same stream (per-stream FIFO)")
+        blocked.add(tag)
+    cap = bucket_capacity(e0 - s0, minimum)
+    indices = [anchor]
+    for i in range(anchor + 1, len(queue)):
+        if len(indices) == max_group:
+            break
+        tag, (s, e) = queue[i]
+        if tag in blocked or bucket_capacity(e - s, minimum) != cap:
+            blocked.add(tag)
+            continue
+        indices.append(i)
+    sealed = len(indices) == max_group or len(indices) < len(queue)
+    return indices, cap, sealed
 
 
 def plan_dispatch_groups(segs: Sequence[tuple[int, int]], max_group: int,
@@ -276,6 +347,66 @@ def plan_dispatch_groups(segs: Sequence[tuple[int, int]], max_group: int,
         n, cap, _ = dispatch_group_head(segs[i:], max_group, minimum)
         groups.append((list(segs[i:i + n]), cap))
         i += n
+    return groups
+
+
+def plan_dispatch_groups_tagged(
+    items: Sequence[tuple[Any, tuple[int, int]]], max_group: int,
+    minimum: int = SEGMENT_BUCKET_MIN, *, fairness: str = "fifo"
+) -> list[tuple[list[tuple[Any, tuple[int, int]]], int]]:
+    """Partition a TAGGED arrival order into dispatch groups.
+
+    Repeated `dispatch_group_head_tagged` over a draining queue — exactly
+    what the multi-tenant `SweepDispatcher` dispatches when it drains N
+    sessions' closed segments, restated as a pure function for the
+    property tests. Each group is `(tagged_segments, frame_capacity)`.
+
+    `fairness` picks how successive groups anchor (FAIRNESS_POLICIES):
+
+      * "fifo" — every group anchors at the current queue head: strict
+        global arrival order. A stream whose head-of-queue segment needs
+        an odd frame capacity delays the anchors of everyone behind it
+        (their shape-compatible segments still ride along as group
+        members).
+      * "round_robin" — anchors rotate over the tags in first-appearance
+        order, skipping tags with nothing queued: a tag with queued work
+        is anchored again after at most (#distinct tags) groups, so no
+        stream waits more than O(streams) dispatches behind a chatty
+        neighbor — at the cost of leaving the global arrival order.
+
+    Invariants under BOTH policies (property-tested in
+    tests/test_multi_stream.py): per tag, its segments appear in arrival
+    order across the groups (per-stream FIFO); nothing is dropped,
+    duplicated, or cross-tagged; every group holds 1..max_group segments
+    sharing one `bucket_capacity`. With a single tag both policies
+    reduce to `plan_dispatch_groups`.
+    """
+    if fairness not in FAIRNESS_POLICIES:
+        raise ValueError(f"unknown fairness {fairness!r}: expected one of "
+                         f"{FAIRNESS_POLICIES}")
+    queue = list(items)
+    order: list[Any] = []
+    for tag, _ in queue:
+        if tag not in order:
+            order.append(tag)
+    cursor = 0
+    groups: list[tuple[list[tuple[Any, tuple[int, int]]], int]] = []
+    while queue:
+        anchor = 0
+        if fairness == "round_robin" and len(order) > 1:
+            present = {tag for tag, _ in queue}
+            for k in range(len(order)):
+                tag = order[(cursor + k) % len(order)]
+                if tag in present:
+                    cursor = (cursor + k + 1) % len(order)
+                    anchor = next(i for i, (t, _) in enumerate(queue)
+                                  if t == tag)
+                    break
+        idx, cap, _ = dispatch_group_head_tagged(queue, max_group, minimum,
+                                                 anchor=anchor)
+        groups.append(([queue[i] for i in idx], cap))
+        for i in reversed(idx):
+            queue.pop(i)
     return groups
 
 
@@ -323,6 +454,58 @@ def pad_segments(frames: EventFrames, segs: Sequence[tuple[int, int]],
         poses_t=jnp.asarray(poses_t[idx]),
         ref_R=jnp.asarray(poses_R[ref]),
         ref_t=jnp.asarray(poses_t[ref]),
+    )
+
+
+def pad_segment_rows(rows: Sequence[tuple[EventFrames, tuple[int, int]]],
+                     capacity: int) -> SegmentBatch:
+    """`pad_segments` for segments that each bring their own frame window.
+
+    The multi-tenant dispatcher coalesces shape-compatible segments from
+    DIFFERENT sessions into one S bucket; their frames live in different
+    per-session stores, so the batch is gathered row by row: `rows[k]` is
+    `(frames_k, (start_k, end_k))` with indices relative to `frames_k`.
+    Each row's gather is the same clamp-at-end indexing as
+    `pad_segments`, so row k is bitwise what
+    `pad_segments(frames_k, [seg_k], capacity)` would produce — grouping
+    segments across sessions never changes a segment's numbers (the
+    per-segment sweep body is independent).
+    """
+    if not rows:
+        raise ValueError(
+            "pad_segment_rows needs at least one segment row: an empty "
+            "group has no reference pose and nothing to sweep (callers "
+            "must skip dispatch for empty buckets)")
+    xy_rows, valid_rows, fv_rows = [], [], []
+    pr_rows, pt_rows, ref_r, ref_t = [], [], [], []
+    for frames, (start, end) in rows:
+        n = end - start
+        xy = np.asarray(frames.xy)
+        if not 0 < n <= capacity:
+            raise ValueError(
+                f"segment {(start, end)} does not fit capacity {capacity}")
+        if not 0 <= start < end <= xy.shape[0]:
+            raise ValueError(f"segment {(start, end)} outside its window of "
+                             f"{xy.shape[0]} frame(s)")
+        idx = np.minimum(np.arange(start, start + capacity), end - 1)
+        valid = np.asarray(frames.valid)
+        poses_R = np.asarray(frames.poses.R)
+        poses_t = np.asarray(frames.poses.t)
+        xy_rows.append(xy[idx])
+        valid_rows.append(valid[idx].astype(np.float32))
+        fv_rows.append((np.arange(capacity) < n).astype(np.float32))
+        pr_rows.append(poses_R[idx])
+        pt_rows.append(poses_t[idx])
+        ref_r.append(poses_R[start])
+        ref_t.append(poses_t[start])
+    return SegmentBatch(
+        xy=jnp.asarray(np.stack(xy_rows)),
+        valid=jnp.asarray(np.stack(valid_rows)),
+        frame_valid=jnp.asarray(np.stack(fv_rows)),
+        poses_R=jnp.asarray(np.stack(pr_rows)),
+        poses_t=jnp.asarray(np.stack(pt_rows)),
+        ref_R=jnp.asarray(np.stack(ref_r)),
+        ref_t=jnp.asarray(np.stack(ref_t)),
     )
 
 

@@ -1,4 +1,7 @@
 """Serving substrate: prefill/decode LM engine with continuous batching
-(`engine`) and the streaming EMVS engine with double-buffered,
-policy-scheduled segment dispatch (`emvs_stream`: latency / throughput /
-adaptive coalescing of closed segments into S buckets)."""
+(`engine`), and the streaming EMVS engine split into a per-camera session
+layer (`stream_session`) and a shared dispatch layer (`sweep_dispatcher`)
+composed by `emvs_stream` — `EMVSStreamEngine` for one camera,
+`MultiStreamEngine` for N cameras with cross-stream coalescing of closed
+segments into shared S buckets (latency / throughput / adaptive dispatch,
+fifo / round_robin fairness)."""

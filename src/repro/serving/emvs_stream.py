@@ -31,14 +31,35 @@ the paper's A/P/R pipelining applied across segments, structured like
     but coalesces queued segments into the largest fitting S bucket once
     the device falls behind — burst-tolerant buffering between the
     asynchronous front-end and the batch-parallel back-end. The queue
-    releases strictly FIFO (`repro.core.pipeline.dispatch_group_head`),
-    so the policy changes the dispatch schedule, never the results.
+    releases per-stream strictly FIFO
+    (`repro.core.pipeline.dispatch_group_head_tagged`), so the policy
+    changes the dispatch schedule, never the results.
+
+The engine is built from two layers (this module composes them):
+
+  * `repro.serving.stream_session.StreamSession` — everything ONE
+    camera's stream owns: aggregator, pose watermark, planner, host
+    frame store (with live/peak byte accounting), per-session stats and
+    result stores;
+  * `repro.serving.sweep_dispatcher.SweepDispatcher` — everything N
+    sessions share: the `(session, segment)`-tagged coalescing queue,
+    dispatch policy + fairness, in-flight slots, the bounded
+    compiled-variant cache, and the batched/sharded sweep backends.
+
+`EMVSStreamEngine` is the N=1 composition (one session over a private
+dispatcher) and keeps the original public API and stats identities.
+`MultiStreamEngine` serves N cameras over ONE dispatcher, so
+shape-compatible segments from different sessions coalesce into one S
+bucket — cross-stream coalescing keeps the device saturated when any
+single stream goes quiet (the ROADMAP's multi-tenant serving item, and
+the use case of multi-camera event rigs).
 
 S-axis padding repeats the last real segment; the per-segment sweep
 body is independent, so padded rows are discarded on harvest without
 touching real outputs — per-segment results are bit-identical to
 `run_emvs` on the integer/nearest datapaths for every chunking of the
-input (tests/test_streaming.py enforces exactly that).
+input (tests/test_streaming.py enforces exactly that) and for every
+session interleaving (tests/test_multi_stream.py).
 
 Sweep backends: `StreamConfig(sweep=...)` picks how each dispatch runs,
 mirroring `run_emvs(sweep=...)`. `"batched"` (default) sweeps the
@@ -72,39 +93,35 @@ and the watermark. `stats` tracks the stall queue depth and watermark
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import NamedTuple
 
-import jax
 import numpy as np
 
 from repro.core.camera import CameraModel
-from repro.core.detection import DepthMap
 from repro.core.dsi import DSIConfig
-from repro.core.geometry import SE3
 from repro.core.pipeline import (
     EMVSOptions,
     EMVSResult,
-    SegmentPlanner,
+    FAIRNESS_POLICIES,
     SegmentResult,
-    dispatch_group_head,
-    pad_segments,
-    process_segments_batched,
 )
-from repro.core.pointcloud import PointCloud, depth_maps_to_points
-from repro.events.aggregation import (
-    EVENTS_PER_FRAME,
-    EventFrames,
-    StreamingAggregator,
-)
+from repro.events.aggregation import EVENTS_PER_FRAME
 from repro.events.simulator import EventStream, Trajectory
 from repro.events.trajectory_stream import (
     POSE_EXTRAPOLATION_POLICIES,
-    PoseStallError,
     TrajectoryBuffer,
 )
+from repro.serving.stream_session import StreamSession, _FrameStore
+from repro.serving.sweep_dispatcher import SweepDispatcher, _InFlight
 
-Array = jax.Array
+__all__ = [
+    "DISPATCH_POLICIES",
+    "EMVSStreamEngine",
+    "MultiStreamEngine",
+    "StreamConfig",
+    "StreamSession",
+    "SweepDispatcher",
+    "iter_event_chunks",
+]
 
 # Dispatch policies for the closed-segment coalescing queue:
 #   * "latency"    — every closed segment dispatches immediately as its own
@@ -148,6 +165,23 @@ class StreamConfig:
     produces bit-identical results on the nearest/integer datapaths
     (tests/test_adaptive_dispatch.py) — these knobs trade latency for
     throughput, never numerics.
+
+    Shared vs per-session: one `StreamConfig` (with the camera model,
+    DSI config and `EMVSOptions`) is shared by every session of a
+    `MultiStreamEngine` — that is what lets one compiled sweep program
+    per (S bucket, capacity) serve all N cameras and lets their segments
+    share device batches. Only the trajectory / pose source (and the
+    event feed itself) is per-session, supplied to `add_session`.
+    `fairness` only matters with N > 1 sessions: it picks how dispatch
+    groups anchor on the shared tagged queue. "fifo" (default) keeps
+    strict global arrival order — simplest to reason about, but one
+    session's odd-capacity segment at the queue head delays everyone
+    else's *anchors* (their shape-compatible segments still ride along
+    as group members). "round_robin" rotates anchors over the sessions,
+    bounding any session's wait to O(sessions) dispatches behind a
+    chatty neighbor, at the cost of leaving global arrival order.
+    Neither setting changes any session's numbers — per-session results
+    stay bit-identical to a dedicated engine under both.
     """
 
     events_per_frame: int = EVENTS_PER_FRAME
@@ -162,6 +196,11 @@ class StreamConfig:
     max_inflight: int = 2
     # How the closed-segment coalescing queue drains (DISPATCH_POLICIES).
     dispatch_policy: str = "adaptive"
+    # How dispatch groups anchor on the shared multi-session queue
+    # (repro.core.pipeline.FAIRNESS_POLICIES): "fifo" = strict global
+    # arrival order, "round_robin" = starvation-bounded rotation over
+    # sessions. Irrelevant at N=1 (both reduce to the same schedule).
+    fairness: str = "fifo"
     # Max-stall back-pressure bound (pose-gated mode): maximum frames the
     # aggregator may hold stalled past the pose watermark (unreleasable
     # by the poses received so far) before `push` raises `PoseStallError`
@@ -197,6 +236,10 @@ class StreamConfig:
             raise ValueError(
                 f"unknown dispatch_policy {self.dispatch_policy!r}: "
                 f"expected one of {DISPATCH_POLICIES}")
+        if self.fairness not in FAIRNESS_POLICIES:
+            raise ValueError(
+                f"unknown fairness {self.fairness!r}: expected one of "
+                f"{FAIRNESS_POLICIES}")
         if self.max_stalled_frames is not None and self.max_stalled_frames < 1:
             raise ValueError(
                 f"max_stalled_frames must be >= 1 (or None for unbounded), "
@@ -214,6 +257,11 @@ class StreamConfig:
 
 def iter_event_chunks(stream: EventStream, chunk_events: int):
     """Split a stream into contiguous chunks of `chunk_events` events."""
+    if isinstance(chunk_events, bool) or not isinstance(
+            chunk_events, (int, np.integer)):
+        raise ValueError(
+            f"chunk_events must be an int, got "
+            f"{type(chunk_events).__name__} ({chunk_events!r})")
     if chunk_events < 1:
         raise ValueError(f"chunk_events must be >= 1, got {chunk_events}")
     n = stream.t.shape[0]
@@ -223,77 +271,11 @@ def iter_event_chunks(stream: EventStream, chunk_events: int):
                           polarity=stream.polarity[sl], valid=stream.valid[sl])
 
 
-class _FrameStore:
-    """Host-side retention window of aggregated frames, globally indexed.
-
-    Frames are appended as they are emitted and evicted once the planner's
-    open segment has moved past them, so memory tracks the open-segment
-    length, not the stream length.
-    """
-
-    def __init__(self):
-        self.base = 0  # global index of the oldest retained frame
-        self._xy: deque[np.ndarray] = deque()
-        self._valid: deque[np.ndarray] = deque()
-        self._t_mid: deque[np.float32] = deque()
-        self._R: deque[np.ndarray] = deque()
-        self._t: deque[np.ndarray] = deque()
-
-    @property
-    def end(self) -> int:
-        """One past the newest retained global frame index."""
-        return self.base + len(self._xy)
-
-    def extend(self, frames: EventFrames) -> None:
-        xy = np.asarray(frames.xy)
-        valid = np.asarray(frames.valid)
-        t_mid = np.asarray(frames.t_mid)
-        r = np.asarray(frames.poses.R)
-        t = np.asarray(frames.poses.t)
-        for k in range(xy.shape[0]):
-            self._xy.append(xy[k])
-            self._valid.append(valid[k])
-            self._t_mid.append(t_mid[k])
-            self._R.append(r[k])
-            self._t.append(t[k])
-
-    def window(self, lo: int, hi: int) -> EventFrames:
-        """Host EventFrames covering global frames [lo, hi)."""
-        if not self.base <= lo < hi <= self.end:
-            raise IndexError(
-                f"window [{lo}, {hi}) outside retained [{self.base}, {self.end})")
-        sel = range(lo - self.base, hi - self.base)
-        return EventFrames(
-            xy=np.stack([self._xy[k] for k in sel]),
-            valid=np.stack([self._valid[k] for k in sel]),
-            t_mid=np.asarray([self._t_mid[k] for k in sel], np.float32),
-            poses=SE3(np.stack([self._R[k] for k in sel]),
-                      np.stack([self._t[k] for k in sel])),
-        )
-
-    def evict_before(self, i: int) -> None:
-        while self.base < i and self._xy:
-            self._xy.popleft()
-            self._valid.popleft()
-            self._t_mid.popleft()
-            self._R.popleft()
-            self._t.popleft()
-            self.base += 1
-
-
-class _InFlight(NamedTuple):
-    """One dispatched sweep: real segments + async device results."""
-
-    segs: list[tuple[int, int]]  # real (unpadded) segments, global indices
-    ref_R: Array  # (S, 3, 3) including padded rows
-    ref_t: Array  # (S, 3)
-    dsis: Array
-    dms: DepthMap
-    pcs: PointCloud
-
-
 class EMVSStreamEngine:
     """Online EMVS: push event chunks, harvest per-keyframe depth maps.
+
+    One `StreamSession` composed over a private `SweepDispatcher` — the
+    N=1 case of `MultiStreamEngine`, with the original single-stream API.
 
     Usage (pose oracle — offline replay with a fully-known trajectory):
         engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts)
@@ -320,323 +302,246 @@ class EMVSStreamEngine:
         self.dsi_cfg = dsi_cfg
         self.opts = opts
         self.stream_cfg = stream_cfg
-        if stream_cfg.sweep == "sharded":
-            from repro.distributed.emvs import (
-                make_segment_mesh,
-                segment_axis_size,
-            )
+        self._dispatcher = SweepDispatcher(cam, dsi_cfg, opts, stream_cfg,
+                                           mesh=mesh)
+        self._session = StreamSession("cam0", self._dispatcher, traj)
 
-            self.mesh = mesh if mesh is not None else make_segment_mesh()
-            n = segment_axis_size(self.mesh)
-            # shard-stable S buckets: every dispatch's segment axis must
-            # divide the mesh, so round each bucket up to a multiple of n
-            # (deduplicated, still ascending — the compiled-variant bound
-            # only shrinks).
-            self._segment_buckets = tuple(sorted(
-                {-(-b // n) * n for b in stream_cfg.segment_buckets}))
-        else:
-            if mesh is not None:
-                raise ValueError(
-                    "mesh= is only meaningful with "
-                    "StreamConfig(sweep='sharded'); the batched sweep "
-                    "would silently ignore it")
-            self.mesh = None
-            self._segment_buckets = stream_cfg.segment_buckets
-        # traj=None: pose-gated mode with a fresh buffer the caller feeds
-        # via push_poses; an existing TrajectoryBuffer (possibly pre-filled)
-        # is used as-is; a Trajectory is the offline oracle.
-        if traj is None:
-            traj = TrajectoryBuffer()
-        self.pose_gated = isinstance(traj, TrajectoryBuffer)
-        if stream_cfg.max_stalled_frames is not None and not self.pose_gated:
-            raise ValueError(
-                "max_stalled_frames is only meaningful in pose-gated mode "
-                "(traj=None or a TrajectoryBuffer): a fully-known "
-                "Trajectory oracle never stalls frames, so the bound "
-                "would silently do nothing")
-        self.aggregator = StreamingAggregator(
-            cam, traj, stream_cfg.events_per_frame,
-            pose_extrapolation=stream_cfg.pose_extrapolation,
-            max_stalled=stream_cfg.max_stalled_frames)
-        mean_depth = 0.5 * (dsi_cfg.z_min + dsi_cfg.z_max)
-        # min_frames=2 is plan_segments' parallax filter, applied online.
-        self.planner = SegmentPlanner(mean_depth * opts.keyframe_dist_frac,
-                                      min_frames=2)
-        self._store = _FrameStore()
-        self._pending: deque[tuple[int, int]] = deque()  # coalescing queue
-        self._inflight: deque[_InFlight] = deque()
-        self._fresh: list[SegmentResult] = []  # harvested, not yet polled
-        self._done: dict[tuple[int, int], tuple[SegmentResult, PointCloud]] = {}
-        self._flushed = False
-        self._tail_flushed = False  # aggregator tail emitted (flush began)
-        # Counter invariants (asserted by tests/test_adaptive_dispatch.py):
-        # segments == sum of dispatched group sizes; coalesced_segments
-        # counts segments that left in a group of >= 2, so
-        # segments == coalesced_segments + (dispatches -
-        # coalesced_dispatches); pending_segments is the live coalescing
-        # queue depth (0 after flush), max_pending its high-water mark.
-        self.stats = {"chunks": 0, "frames": 0, "segments": 0,
-                      "dispatches": 0, "padded_segments": 0,
-                      "pending_segments": 0, "max_pending": 0,
-                      "coalesced_dispatches": 0, "coalesced_segments": 0,
-                      "pose_chunks": 0, "stalled_frames": 0, "max_stalled": 0,
-                      "pose_watermark": self.aggregator.pose_watermark}
+    # --- delegation to the session/dispatcher layers ----------------------
+    # (kept as properties so existing callers and tests see the same
+    # objects they used to poke at directly)
 
-    # --- ingest -----------------------------------------------------------
+    @property
+    def mesh(self):
+        return self._dispatcher.mesh
+
+    @property
+    def _segment_buckets(self) -> tuple[int, ...]:
+        return self._dispatcher._segment_buckets
+
+    @property
+    def pose_gated(self) -> bool:
+        return self._session.pose_gated
+
+    @property
+    def aggregator(self):
+        return self._session.aggregator
+
+    @property
+    def planner(self):
+        return self._session.planner
+
+    @property
+    def _store(self) -> _FrameStore:
+        return self._session._store
+
+    @property
+    def _pending(self):
+        return self._dispatcher._pending
+
+    @property
+    def _inflight(self):
+        return self._dispatcher._inflight
+
+    @property
+    def _done(self):
+        return self._session._done
+
+    @property
+    def stats(self) -> dict:
+        """Merged per-session + dispatcher counters, with the original
+        single-stream keys and identities (tests/test_adaptive_dispatch.py)
+        plus the session split's additions ("empty_chunks",
+        "frame_store_bytes", "frame_store_peak_bytes",
+        "cross_stream_dispatches" — always 0 at N=1)."""
+        out = dict(self._session.stats)
+        d = self._dispatcher.stats
+        for key in ("dispatches", "padded_segments", "pending_segments",
+                    "max_pending", "coalesced_dispatches",
+                    "coalesced_segments", "cross_stream_dispatches"):
+            out[key] = d[key]
+        return out
+
+    # --- the single-stream API, unchanged ---------------------------------
 
     def push(self, chunk: EventStream) -> list[SegmentResult]:
         """Feed one event chunk; returns segment results that became ready
         (without blocking — completed sweeps only). In pose-gated mode,
         frames whose mid-time lies past the pose watermark stall inside
         the aggregator and surface on a later `push_poses`."""
-        if self._flushed or self._tail_flushed:
-            # once flush() has consumed the aggregator's tail remainder —
-            # including a flush that then raised PoseStallError — more
-            # events would land AFTER a padded mid-stream tail frame and
-            # silently shift every later frame boundary
-            raise RuntimeError(
-                "push after flush: the event tail was already emitted "
-                "(only push_poses / finalize_poses / flush may follow)")
-        self.stats["chunks"] += 1
-        try:
-            self._ingest(self.aggregator.push(chunk))
-        finally:
-            # runs on the PoseStallError (max-stall bound) path too, so
-            # max_stalled records the true peak, not the last quiet push
-            self._track_stall()
-        return self.poll()
+        return self._session.push(chunk)
 
     def push_poses(self, chunk: Trajectory) -> list[SegmentResult]:
         """Feed one pose chunk from the tracker; stalled frames the
         advanced watermark now covers are released (bitwise-identically
-        posed), planned, and dispatched. Returns results that became
-        ready, exactly like `push`."""
-        if self._flushed:
-            raise RuntimeError("push_poses after flush: the engine is drained")
-        if not self.pose_gated:
-            raise RuntimeError(
-                "push_poses requires a pose-gated engine: construct with "
-                "traj=None (or a TrajectoryBuffer), not a Trajectory oracle")
-        self.stats["pose_chunks"] += 1
-        self._ingest(self.aggregator.push_poses(chunk))
-        self._track_stall()
-        return self.poll()
+        posed), planned, and dispatched."""
+        return self._session.push_poses(chunk)
 
     def finalize_poses(self) -> list[SegmentResult]:
         """Declare the pose stream complete: every still-stalled frame is
-        released through `StreamConfig.pose_extrapolation` (its pose can
-        no longer gain a bracketing sample). Call before `flush` when the
-        tracker ends behind the event front."""
-        if self._flushed:
-            raise RuntimeError(
-                "finalize_poses after flush: the engine is drained")
-        if not self.pose_gated:
-            raise RuntimeError(
-                "finalize_poses requires a pose-gated engine: construct "
-                "with traj=None (or a TrajectoryBuffer)")
-        self._ingest(self.aggregator.finalize_poses())
-        self._track_stall()
-        return self.poll()
-
-    def _track_stall(self) -> None:
-        n = self.aggregator.stalled_frames
-        self.stats["stalled_frames"] = n
-        self.stats["max_stalled"] = max(self.stats["max_stalled"], n)
-        self.stats["pose_watermark"] = self.aggregator.pose_watermark
-
-    def _ingest(self, frames: EventFrames) -> None:
-        n = int(frames.xy.shape[0])
-        if n == 0:
-            return
-        self.stats["frames"] += n
-        self._store.extend(frames)
-        closed: list[tuple[int, int]] = []
-        t_host = np.asarray(frames.poses.t)
-        for k in range(n):
-            seg = self.planner.push(t_host[k])
-            if seg is not None:
-                closed.append(seg)
-        self._dispatch_all(closed)
-
-    # --- dispatch (double-buffered, policy-scheduled) ---------------------
-
-    def _dispatch_all(self, closed: list[tuple[int, int]]) -> None:
-        """Queue newly closed segments; drain per the dispatch policy."""
-        self._pending.extend(closed)
-        self._note_queue_depth()
-        self._drain_pending(final=False)
-
-    def _note_queue_depth(self) -> None:
-        d = len(self._pending)
-        self.stats["pending_segments"] = d
-        self.stats["max_pending"] = max(self.stats["max_pending"], d)
-
-    def _harvest_ready(self) -> list[SegmentResult]:
-        """Pop and harvest every device-completed sweep at the head of the
-        in-flight queue (non-blocking, dispatch order)."""
-        out: list[SegmentResult] = []
-        while self._inflight and self._inflight[0].dms.depth.is_ready():
-            out.extend(self._harvest(self._inflight.popleft(), block=False))
-        return out
-
-    def _pop_group(self, final: bool) -> tuple[list[tuple[int, int]], int] | None:
-        """Pop the next dispatchable head group off the coalescing queue,
-        or None when the policy says to keep coalescing. Only the FIFO
-        head is ever eligible, so results release in segment-close order
-        under every policy."""
-        if not self._pending:
-            return None
-        policy = self.stream_cfg.dispatch_policy
-        n, cap, sealed = dispatch_group_head(self._pending,
-                                             self._segment_buckets[-1])
-        if policy == "latency":
-            n = 1  # one sweep per segment, always — the baseline schedule
-        elif policy == "throughput" and not (final or sealed):
-            return None  # the head group can still grow: keep coalescing
-        elif (policy == "adaptive" and not final
-              and len(self._inflight) >= self.stream_cfg.max_inflight):
-            return None  # device saturated: coalesce until a slot frees
-        return [self._pending.popleft() for _ in range(n)], cap
-
-    def _drain_pending(self, final: bool) -> None:
-        """Dispatch head groups while the policy allows. With `final`
-        (flush) every policy drains the whole queue — back-pressure
-        blocking in `_dispatch` paces the device."""
-        while self._pending:
-            if not final:
-                # harvest completed sweeps first: results surface sooner
-                # and the freed slots un-deepen the in-flight queue the
-                # adaptive policy reads
-                self._fresh.extend(self._harvest_ready())
-            group = self._pop_group(final)
-            if group is None:
-                break
-            self._dispatch(*group)
-            self._note_queue_depth()
-        # the retention window must cover segments still waiting in the
-        # coalescing queue, not just the planner's open segment: a queued
-        # head group references frames the planner already moved past
-        self._store.evict_before(self._pending[0][0] if self._pending
-                                 else self.planner.open_start)
-
-    def _s_bucket(self, n: int) -> int:
-        for b in self._segment_buckets:
-            if b >= n:
-                return b
-        raise AssertionError(f"group of {n} exceeds top segment bucket")
-
-    def _sweep(self, batch) -> tuple[Array, DepthMap]:
-        if self.stream_cfg.sweep == "sharded":
-            from repro.distributed.emvs import process_segments_sharded
-
-            return process_segments_sharded(self.cam, self.dsi_cfg, batch,
-                                            self.opts, mesh=self.mesh)
-        return process_segments_batched(self.cam, self.dsi_cfg, batch,
-                                        self.opts)
-
-    def _dispatch(self, segs: list[tuple[int, int]], cap: int) -> None:
-        # _dispatch_all only forms groups from non-empty closed-segment
-        # runs, so an empty dispatch is a planner/grouping bug, not a
-        # stream condition — and pad_segments would reject it anyway.
-        assert segs, "_dispatch requires at least one closed segment"
-        s_pad = self._s_bucket(len(segs))
-        # padded rows repeat the last real segment: lax.map's body is
-        # per-segment independent, so they are pure discarded work
-        padded = list(segs) + [segs[-1]] * (s_pad - len(segs))
-        lo = min(s for s, _ in padded)
-        hi = max(e for _, e in padded)
-        win = self._store.window(lo, hi)
-        shifted = [(s - lo, e - lo) for s, e in padded]
-        batch = pad_segments(win, shifted, cap)
-        # async dispatch: both calls below return with the sweep enqueued,
-        # so the caller stages the next batch while this one votes
-        dsis, dms = self._sweep(batch)
-        pcs = depth_maps_to_points(self.cam, dms, SE3(batch.ref_R, batch.ref_t))
-        self._inflight.append(
-            _InFlight(list(segs), batch.ref_R, batch.ref_t, dsis, dms, pcs))
-        self.stats["segments"] += len(segs)
-        self.stats["dispatches"] += 1
-        self.stats["padded_segments"] += s_pad - len(segs)
-        if len(segs) > 1:
-            self.stats["coalesced_dispatches"] += 1
-            self.stats["coalesced_segments"] += len(segs)
-        while len(self._inflight) > self.stream_cfg.max_inflight:
-            # back-pressure: block on the oldest sweep; its results are
-            # queued for the caller's next poll
-            self._fresh.extend(self._harvest(self._inflight.popleft(),
-                                             block=True))
-
-    # --- harvest ----------------------------------------------------------
-
-    def _harvest(self, inf: _InFlight, block: bool) -> list[SegmentResult]:
-        if block:
-            inf.dms.depth.block_until_ready()
-        results: list[SegmentResult] = []
-        for k, (start, end) in enumerate(inf.segs):
-            dm = DepthMap(inf.dms.depth[k], inf.dms.mask[k],
-                          inf.dms.confidence[k])
-            res = SegmentResult(dm, inf.dsis[k],
-                                SE3(inf.ref_R[k], inf.ref_t[k]), (start, end))
-            pc = PointCloud(inf.pcs.points[k], inf.pcs.weights[k],
-                            inf.pcs.valid[k])
-            self._done[(start, end)] = (res, pc)
-            results.append(res)
-        return results
+        released through `StreamConfig.pose_extrapolation`."""
+        return self._session.finalize_poses()
 
     def poll(self) -> list[SegmentResult]:
         """Results that became ready since the last poll: back-pressure
-        harvests plus every in-flight sweep the device has finished.
-        Freed in-flight slots let the coalescing queue drain, so a poll
-        can also dispatch segments the adaptive policy was holding."""
-        self._fresh.extend(self._harvest_ready())
-        self._drain_pending(final=False)
-        self._fresh.extend(self._harvest_ready())
-        out, self._fresh = self._fresh, []
-        return out
+        harvests plus every in-flight sweep the device has finished."""
+        return self._session.poll()
 
     def flush(self) -> EMVSResult:
         """End of stream: flush the partial frame and the open segment,
         drain all in-flight sweeps, and return the accumulated result
-        (same ordering and types as offline `run_emvs`).
-
-        In pose-gated mode, flushing while frames still await their pose
-        chunks raises `PoseStallError` (naming the stalled frame count
-        and the watermark) — either push the missing chunks or call
-        `finalize_poses` first. The engine stays usable after the error
-        for the pose side only: frames released by later pose chunks are
-        not lost, but `push` is rejected from the first flush attempt on
-        (the event tail was already emitted as a padded frame)."""
-        if not self._flushed:
-            try:
-                if not self._tail_flushed:
-                    self._tail_flushed = True
-                    self._ingest(self.aggregator.flush())
-            finally:
-                # runs when the tail frame trips the max-stall bound too,
-                # so max_stalled records the true peak on the raise path
-                self._track_stall()
-            stalled = self.aggregator.stalled_frames
-            if stalled:
-                raise PoseStallError(
-                    f"flush with {stalled} frame(s) stalled awaiting poses: "
-                    f"pose watermark t={self.aggregator.pose_watermark:.6g}, "
-                    f"oldest stalled frame t_mid="
-                    f"{self.aggregator.oldest_stalled_t:.6g}; push the "
-                    f"missing pose chunks or call finalize_poses() first")
-            tail = self.planner.flush()
-            if tail is not None:
-                self._pending.append(tail)
-                self._note_queue_depth()
-            self._flushed = True
-        # end of stream: every policy drains the coalescing queue fully
-        self._drain_pending(final=True)
-        while self._inflight:
-            self._harvest(self._inflight.popleft(), block=True)
-        self._fresh.clear()  # flush reports everything via result()
-        return self.result()
+        (same ordering and types as offline `run_emvs`). See
+        `StreamSession.flush` for the pose-gated error contract."""
+        return self._session.flush()
 
     def result(self) -> EMVSResult:
         """Results harvested so far, in frame order (complete after flush)."""
-        keys = sorted(self._done)
-        return EMVSResult(segments=[self._done[k][0] for k in keys],
-                          clouds=[self._done[k][1] for k in keys])
+        return self._session.result()
+
+    # --- private compat shims (exercised by tests/test_streaming.py) ------
+
+    def _dispatch(self, segs: list[tuple[int, int]], cap: int) -> None:
+        assert segs, "_dispatch requires at least one closed segment"
+        self._dispatcher._dispatch([(self._session, seg) for seg in segs],
+                                   cap)
+
+    def _dispatch_all(self, closed: list[tuple[int, int]]) -> None:
+        if closed:
+            self._dispatcher.enqueue(self._session, closed)
+        self._dispatcher.pump()
+
+
+class MultiStreamEngine:
+    """N camera sessions multiplexed onto ONE shared sweep dispatcher.
+
+    Why: a single event stream leaves the accelerator idle whenever its
+    camera goes quiet — single-stream dispatches under-fill the S buckets
+    the compiled sweep is shaped for. With N sessions on one dispatcher,
+    closed segments from different cameras coalesce into the same
+    device batch whenever their frame capacities match (cross-stream
+    coalescing), so concurrent trickle streams approach the batch
+    efficiency of one dense stream: fewer dispatches, fuller buckets,
+    higher aggregate segments/s (benchmarks/streaming_latency.py
+    `multi_stream_sweep` measures exactly this against N dedicated
+    engines). Coalescing helps most when sessions are individually
+    sparse but collectively busy; a single saturated stream gains
+    nothing (it already fills its buckets) — use `EMVSStreamEngine`.
+
+    Shared vs per-session: the camera model, DSI config, `EMVSOptions`
+    and `StreamConfig` are fixed at construction and shared by every
+    session — sharing them is what lets one compiled variant per
+    (S bucket, capacity) serve all cameras. Per-session: the pose source
+    (`add_session(traj=...)`: an oracle `Trajectory`, a pre-filled
+    `TrajectoryBuffer`, or None for pose-gated streaming) and the event
+    feed. Mixed rigs needing different camera models need separate
+    engines — their sweeps could not share compiled programs anyway.
+
+    Fairness (`StreamConfig.fairness`): "fifo" anchors every dispatch
+    group at the global arrival head — strict and predictable, but a
+    chatty session can make a quiet one wait; "round_robin" rotates
+    anchors over sessions, bounding any session's wait to O(sessions)
+    dispatches. Neither changes results: every session's outputs are
+    bit-identical to a dedicated `EMVSStreamEngine` on the
+    integer/nearest datapaths, under every dispatch policy, sweep
+    backend, and session interleaving (tests/test_multi_stream.py).
+
+    Usage:
+        engine = MultiStreamEngine(cam, dsi_cfg, opts, stream_cfg)
+        left = engine.add_session("left", traj=traj_l)
+        right = engine.add_session("right", traj=traj_r)
+        for chunk_l, chunk_r in rig_feed():
+            left.push(chunk_l)     # or engine.push("left", chunk_l)
+            right.push(chunk_r)
+        results = engine.flush()   # {"left": EMVSResult, "right": ...}
+
+    Sessions are admitted up front or on the fly (`add_session` any time
+    before that session's first push); each holds its own fixed slot in
+    the dispatcher's fairness rotation, mirroring `serving/engine.py`'s
+    fixed-slot admission. One session's `flush` drains only its own
+    work — the rig keeps streaming.
+    """
+
+    def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig,
+                 opts: EMVSOptions = EMVSOptions(),
+                 stream_cfg: StreamConfig = StreamConfig(), *,
+                 mesh=None):
+        self.cam = cam
+        self.dsi_cfg = dsi_cfg
+        self.opts = opts
+        self.stream_cfg = stream_cfg
+        self.dispatcher = SweepDispatcher(cam, dsi_cfg, opts, stream_cfg,
+                                          mesh=mesh)
+        self._sessions: dict[str, StreamSession] = {}
+
+    @property
+    def mesh(self):
+        return self.dispatcher.mesh
+
+    @property
+    def sessions(self) -> dict[str, StreamSession]:
+        """Admitted sessions by id (insertion = fairness rotation order)."""
+        return dict(self._sessions)
+
+    def add_session(self, session_id: str | None = None,
+                    traj: Trajectory | TrajectoryBuffer | None = None
+                    ) -> StreamSession:
+        """Admit one camera stream; returns its `StreamSession` handle.
+
+        `session_id` defaults to "cam<k>" in admission order. `traj` is
+        the per-session pose source (None = pose-gated: feed via
+        `push_poses`)."""
+        if session_id is None:
+            session_id = f"cam{len(self._sessions)}"
+        if session_id in self._sessions:
+            raise ValueError(
+                f"duplicate session id {session_id!r}: already admitted "
+                f"(have {sorted(self._sessions)})")
+        session = StreamSession(session_id, self.dispatcher, traj)
+        self._sessions[session_id] = session
+        return session
+
+    def session(self, session_id: str) -> StreamSession:
+        try:
+            return self._sessions[session_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown session {session_id!r}: admitted sessions are "
+                f"{sorted(self._sessions)}") from None
+
+    # id-addressed conveniences (the session handles carry the same API)
+
+    def push(self, session_id: str, chunk: EventStream) -> list[SegmentResult]:
+        return self.session(session_id).push(chunk)
+
+    def push_poses(self, session_id: str,
+                   chunk: Trajectory) -> list[SegmentResult]:
+        return self.session(session_id).push_poses(chunk)
+
+    def finalize_poses(self, session_id: str) -> list[SegmentResult]:
+        return self.session(session_id).finalize_poses()
+
+    def poll(self) -> dict[str, list[SegmentResult]]:
+        """Pump the shared dispatcher once; returns each session's newly
+        ready results keyed by session id (possibly empty lists)."""
+        self.dispatcher.pump()
+        return {sid: sess._take_fresh()
+                for sid, sess in self._sessions.items()}
+
+    def flush(self, session_id: str | None = None):
+        """Flush one session (returns its `EMVSResult`) or, with no id,
+        every admitted session in admission order (returns a dict keyed
+        by session id). Flushing one session leaves the others
+        streaming."""
+        if session_id is not None:
+            return self.session(session_id).flush()
+        return {sid: sess.flush() for sid, sess in self._sessions.items()}
+
+    def result(self, session_id: str) -> EMVSResult:
+        return self.session(session_id).result()
+
+    @property
+    def stats(self) -> dict:
+        """Dispatcher-level counters plus per-session counters:
+        `{"dispatcher": {...}, "sessions": {sid: {...}}}`."""
+        return {"dispatcher": dict(self.dispatcher.stats),
+                "sessions": {sid: dict(sess.stats)
+                             for sid, sess in self._sessions.items()}}

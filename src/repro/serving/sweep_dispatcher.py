@@ -1,0 +1,339 @@
+"""Shared dispatch layer of the streaming EMVS engine.
+
+`SweepDispatcher` owns everything N camera sessions share on one
+accelerator: the `(session, segment)`-tagged coalescing queue, the
+dispatch policy (latency / throughput / adaptive) and fairness anchor
+rule (fifo / round_robin), the double-buffered in-flight slots, the
+bounded compiled-variant cache (via fixed S buckets and frame-capacity
+buckets), and the batched/sharded sweep backends.
+
+Sessions (`repro.serving.stream_session.StreamSession`) `enqueue` their
+closed segments tagged with themselves; the dispatcher forms head groups
+with `repro.core.pipeline.dispatch_group_head_tagged`, so
+`pad_segments`-compatible segments from DIFFERENT sessions fill one S
+bucket — the cross-stream coalescing that keeps the device saturated
+when any single stream goes quiet. Grouping never changes a segment's
+numbers (rows are gathered per session store by `pad_segment_rows` and
+the per-segment sweep body is independent), so every session's results
+stay bit-identical to a dedicated single-stream engine, under any
+interleaving, policy, and fairness setting. Harvested rows are routed
+back to their owning session's result stores; one session's `flush`
+drains only its share of the queue (same-capacity neighbors may ride
+along — legal for the same independence reason).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import NamedTuple
+
+import jax
+
+from repro.core.camera import CameraModel
+from repro.core.detection import DepthMap
+from repro.core.dsi import DSIConfig
+from repro.core.geometry import SE3
+from repro.core.pipeline import (
+    EMVSOptions,
+    SegmentResult,
+    dispatch_group_head_tagged,
+    pad_segment_rows,
+    process_segments_batched,
+)
+from repro.core.pointcloud import PointCloud, depth_maps_to_points
+
+Array = jax.Array
+
+
+class _InFlight(NamedTuple):
+    """One dispatched sweep: real segments + async device results.
+
+    `owners[k]` is the session that owns `segs[k]` (rows of one sweep may
+    belong to different sessions). `owners=None` — e.g. an entry staged
+    by test stubs predating the session split — routes every row to the
+    dispatcher's default (first-registered) session on harvest.
+    """
+
+    segs: list[tuple[int, int]]  # real (unpadded) segments, global indices
+    ref_R: Array  # (S, 3, 3) including padded rows
+    ref_t: Array  # (S, 3)
+    dsis: Array
+    dms: DepthMap
+    pcs: PointCloud
+    owners: tuple | None = None  # per-row owning sessions
+
+
+class SweepDispatcher:
+    """Shared segment-sweep scheduler for N streaming sessions.
+
+    Construction mirrors the single-stream engine: the sharded backend
+    rounds every S bucket up to a multiple of the mesh's segment-axis
+    size so dispatch shapes stay shard-stable; the batched backend
+    rejects a stray `mesh=`. `cam`, `dsi_cfg`, `opts` and `stream_cfg`
+    are shared by every session on the dispatcher — one compiled sweep
+    program per (S bucket, capacity) serves them all, which is exactly
+    what makes cross-stream coalescing possible.
+    """
+
+    def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig,
+                 opts: EMVSOptions = EMVSOptions(),
+                 stream_cfg=None, *, mesh=None):
+        if stream_cfg is None:
+            from repro.serving.emvs_stream import StreamConfig
+
+            stream_cfg = StreamConfig()
+        self.cam = cam
+        self.dsi_cfg = dsi_cfg
+        self.opts = opts
+        self.stream_cfg = stream_cfg
+        if stream_cfg.sweep == "sharded":
+            from repro.distributed.emvs import (
+                make_segment_mesh,
+                segment_axis_size,
+            )
+
+            self.mesh = mesh if mesh is not None else make_segment_mesh()
+            n = segment_axis_size(self.mesh)
+            # shard-stable S buckets: every dispatch's segment axis must
+            # divide the mesh, so round each bucket up to a multiple of n
+            # (deduplicated, still ascending — the compiled-variant bound
+            # only shrinks).
+            self._segment_buckets = tuple(sorted(
+                {-(-b // n) * n for b in stream_cfg.segment_buckets}))
+        else:
+            if mesh is not None:
+                raise ValueError(
+                    "mesh= is only meaningful with "
+                    "StreamConfig(sweep='sharded'); the batched sweep "
+                    "would silently ignore it")
+            self.mesh = None
+            self._segment_buckets = stream_cfg.segment_buckets
+        self._sessions: list = []  # registration = round-robin order
+        self._rr_cursor = 0
+        self.default_owner = None  # harvest target for untagged in-flight
+        # tagged coalescing queue: (session, (start, end)) in arrival order
+        self._pending: list = []
+        self._inflight: deque[_InFlight] = deque()
+        # Counter invariants (asserted by tests/test_adaptive_dispatch.py
+        # via the N=1 engine): segments == sum of dispatched group sizes;
+        # coalesced_segments counts segments that left in a group of >= 2,
+        # so segments == coalesced_segments + (dispatches -
+        # coalesced_dispatches); pending_segments is the live tagged-queue
+        # depth (0 after all sessions flush), max_pending its high-water
+        # mark; cross_stream_dispatches counts groups whose rows span more
+        # than one session — the coalescing the multi-tenant benchmark
+        # gates on.
+        self.stats = {"segments": 0, "dispatches": 0, "padded_segments": 0,
+                      "pending_segments": 0, "max_pending": 0,
+                      "coalesced_dispatches": 0, "coalesced_segments": 0,
+                      "cross_stream_dispatches": 0}
+
+    # --- session plumbing -------------------------------------------------
+
+    def register(self, session) -> None:
+        self._sessions.append(session)
+        if self.default_owner is None:
+            self.default_owner = session
+
+    def enqueue(self, session, closed: list[tuple[int, int]]) -> None:
+        """Append one session's newly closed segments to the tagged queue
+        (arrival order; they dispatch on the next pump/drain)."""
+        self._pending.extend((session, seg) for seg in closed)
+        self._note_queue_depth()
+
+    def _note_queue_depth(self) -> None:
+        d = len(self._pending)
+        self.stats["pending_segments"] = d
+        self.stats["max_pending"] = max(self.stats["max_pending"], d)
+
+    def _oldest_pending_start(self, session) -> int | None:
+        # per-session FIFO holds in the tagged queue, so a session's first
+        # occurrence is its oldest queued segment
+        for sess, (start, _) in self._pending:
+            if sess is session:
+                return start
+        return None
+
+    def _evict_all(self) -> None:
+        # each session's retention window must cover its segments still
+        # waiting in the shared queue, not just its planner's open
+        # segment: a queued group references frames the planner already
+        # moved past
+        for sess in self._sessions:
+            floor = self._oldest_pending_start(sess)
+            if floor is None:
+                floor = sess.planner.open_start
+            sess._store.evict_before(floor)
+            sess._sync_store_stats()
+
+    # --- dispatch (double-buffered, policy- and fairness-scheduled) -------
+
+    def pump(self) -> None:
+        """One scheduler turn: harvest device-completed sweeps (routing
+        results to their owning sessions), drain the tagged queue per the
+        dispatch policy and fairness anchor rule, harvest again, evict."""
+        self._harvest_ready()
+        self._drain(final=False)
+        self._harvest_ready()
+        self._evict_all()
+
+    def drain_session(self, session) -> None:
+        """End of one session's stream: dispatch every queued segment of
+        `session` (same-capacity segments of other sessions ride along),
+        then block until all sweeps carrying its rows have harvested.
+        Other sessions' queued work stays put."""
+        while True:
+            group = self._pop_group(final=True, only=session)
+            if group is None:
+                break
+            self._dispatch(*group)
+            self._note_queue_depth()
+        self._evict_all()
+        while any(inf.owners is None or session in inf.owners
+                  for inf in self._inflight):
+            self._harvest(self._inflight.popleft(), block=True)
+
+    def _drain(self, final: bool) -> None:
+        """Dispatch groups while the policy allows. With `final` every
+        policy drains the whole queue — back-pressure blocking in
+        `_dispatch` paces the device."""
+        while self._pending:
+            if not final:
+                # harvest completed sweeps first: results surface sooner
+                # and the freed slots un-deepen the in-flight queue the
+                # adaptive policy reads
+                self._harvest_ready()
+            group = self._pop_group(final)
+            if group is None:
+                break
+            self._dispatch(*group)
+            self._note_queue_depth()
+        self._evict_all()
+
+    def _anchor_candidates(self, only) -> list:
+        """Sessions eligible to anchor the next group, in try order."""
+        if only is not None:
+            return [only]
+        if self.stream_cfg.fairness == "fifo" or len(self._sessions) == 1:
+            # strict arrival order: only the global queue head ever anchors
+            return [self._pending[0][0]]
+        # round_robin: rotate over registered sessions, skipping those
+        # with nothing queued; trying each once per turn means a session
+        # whose anchored group is policy-held (unsealed throughput group)
+        # does not head-of-line block a neighbor with a dispatchable one
+        present = {id(sess) for sess, _ in self._pending}
+        n = len(self._sessions)
+        return [self._sessions[(self._rr_cursor + k) % n] for k in range(n)
+                if id(self._sessions[(self._rr_cursor + k) % n]) in present]
+
+    def _pop_group(self, final: bool, only=None):
+        """Pop the next dispatchable group off the tagged queue, or None
+        when the policy says to keep coalescing. Anchors follow the
+        fairness rule; each anchored group obeys per-stream FIFO, so a
+        session's results release in its segment-close order under every
+        policy and fairness setting."""
+        if not self._pending:
+            return None
+        policy = self.stream_cfg.dispatch_policy
+        if (policy == "adaptive" and not final
+                and len(self._inflight) >= self.stream_cfg.max_inflight):
+            return None  # device saturated: coalesce until a slot frees
+        for sess in self._anchor_candidates(only):
+            if only is not None and self._oldest_pending_start(sess) is None:
+                return None  # the drained session has nothing queued
+            anchor = next(i for i, (s, _) in enumerate(self._pending)
+                          if s is sess)
+            idx, cap, sealed = dispatch_group_head_tagged(
+                self._pending, self._segment_buckets[-1], anchor=anchor)
+            if policy == "latency":
+                idx = idx[:1]  # one sweep per segment — the baseline
+            elif policy == "throughput" and not (final or sealed):
+                continue  # this anchor's group can still grow: try the next
+            group = [self._pending[i] for i in idx]
+            for i in reversed(idx):
+                self._pending.pop(i)
+            if self._sessions:
+                # fairness bookkeeping: the dispatched session goes to the
+                # back of the rotation
+                try:
+                    self._rr_cursor = ((self._sessions.index(sess) + 1)
+                                       % len(self._sessions))
+                except ValueError:
+                    pass
+            return group, cap
+        return None
+
+    def _s_bucket(self, n: int) -> int:
+        for b in self._segment_buckets:
+            if b >= n:
+                return b
+        raise AssertionError(f"group of {n} exceeds top segment bucket")
+
+    def _sweep(self, batch) -> tuple[Array, DepthMap]:
+        if self.stream_cfg.sweep == "sharded":
+            from repro.distributed.emvs import process_segments_sharded
+
+            return process_segments_sharded(self.cam, self.dsi_cfg, batch,
+                                            self.opts, mesh=self.mesh)
+        return process_segments_batched(self.cam, self.dsi_cfg, batch,
+                                        self.opts)
+
+    def _dispatch(self, group, cap: int) -> None:
+        """Stage and asynchronously dispatch one tagged group: gather each
+        row from its owning session's frame store, pad the segment axis to
+        the smallest fitting S bucket, enqueue the sweep."""
+        # groups are only formed from non-empty closed-segment runs, so an
+        # empty dispatch is a planner/grouping bug, not a stream condition
+        # — and pad_segment_rows would reject it anyway.
+        assert group, "_dispatch requires at least one closed segment"
+        s_pad = self._s_bucket(len(group))
+        # padded rows repeat the last real segment: the sweep body is
+        # per-segment independent, so they are pure discarded work
+        padded = list(group) + [group[-1]] * (s_pad - len(group))
+        rows = [(sess._store.window(start, end), (0, end - start))
+                for sess, (start, end) in padded]
+        batch = pad_segment_rows(rows, cap)
+        # async dispatch: both calls below return with the sweep enqueued,
+        # so the caller stages the next batch while this one votes
+        dsis, dms = self._sweep(batch)
+        pcs = depth_maps_to_points(self.cam, dms, SE3(batch.ref_R, batch.ref_t))
+        self._inflight.append(_InFlight(
+            [seg for _, seg in group], batch.ref_R, batch.ref_t, dsis, dms,
+            pcs, owners=tuple(sess for sess, _ in group)))
+        self.stats["segments"] += len(group)
+        self.stats["dispatches"] += 1
+        self.stats["padded_segments"] += s_pad - len(group)
+        if len(group) > 1:
+            self.stats["coalesced_dispatches"] += 1
+            self.stats["coalesced_segments"] += len(group)
+        if len({id(sess) for sess, _ in group}) > 1:
+            self.stats["cross_stream_dispatches"] += 1
+        for sess, _ in group:
+            sess.stats["segments"] += 1
+        while len(self._inflight) > self.stream_cfg.max_inflight:
+            # back-pressure: block on the oldest sweep; its results are
+            # routed for the owning sessions' next poll
+            self._harvest(self._inflight.popleft(), block=True)
+
+    # --- harvest ----------------------------------------------------------
+
+    def _harvest_ready(self) -> None:
+        """Pop and harvest every device-completed sweep at the head of the
+        in-flight queue (non-blocking, dispatch order)."""
+        while self._inflight and self._inflight[0].dms.depth.is_ready():
+            self._harvest(self._inflight.popleft(), block=False)
+
+    def _harvest(self, inf: _InFlight, block: bool) -> None:
+        if block:
+            inf.dms.depth.block_until_ready()
+        owners = inf.owners
+        if owners is None:
+            owners = (self.default_owner,) * len(inf.segs)
+        for k, ((start, end), sess) in enumerate(zip(inf.segs, owners)):
+            dm = DepthMap(inf.dms.depth[k], inf.dms.mask[k],
+                          inf.dms.confidence[k])
+            res = SegmentResult(dm, inf.dsis[k],
+                                SE3(inf.ref_R[k], inf.ref_t[k]), (start, end))
+            pc = PointCloud(inf.pcs.points[k], inf.pcs.weights[k],
+                            inf.pcs.valid[k])
+            sess._done[(start, end)] = (res, pc)
+            sess._fresh.append(res)
