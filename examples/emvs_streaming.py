@@ -50,6 +50,25 @@ tracker running behind the sensor), frames past the pose-lag watermark
 stall until their bracketing poses arrive, and `finalize_poses` closes
 the pose stream before the flush. The reconstruction stays bit-identical
 to the oracle mode — only the latency profile changes.
+
+`--hygiene POLICY` picks the ingest guard (`StreamConfig(hygiene=...)`):
+"raise" (default) rejects misordered/overlapping/duplicate/out-of-bounds
+chunks with typed errors, "drop" sheds exactly the offending events
+(warn + count), "reorder" absorbs misordering inside `--reorder-slack`
+seconds bit-identically, "off" disables the guard. Pair with
+`--corrupt MODE` to fault-inject one `simulator.corrupt_stream` mode
+(shuffle_events, swap_chunks, duplicate_chunk, out_of_bounds, hot_pixel)
+into the stream and watch the policy respond: a typed rejection is
+printed and the demo stops; surviving policies stream to the end and
+report what was shed.
+
+`--budget-frames N` caps the frame store at N aggregated frames' bytes
+(`StreamConfig(frame_store_budget_bytes=...)`): admission stalls
+(`--budget-policy stall`, back-pressure) or raises `MemoryBudgetError`
+(`--budget-policy reject`; the demo retries via `poll()`) whenever
+admitting the next frame would exceed the budget — `live_bytes` never
+does, and queued segments are never evicted early. N below the largest
+segment's working set (+1 frame) is a fatal, clearly-worded error.
 """
 from __future__ import annotations
 
@@ -64,12 +83,24 @@ from repro.core.pipeline import EMVSOptions, run_emvs
 from repro.core.pointcloud import concatenate, radius_outlier_filter
 from repro.events.aggregation import EVENTS_PER_FRAME, aggregate
 from repro.events.simulator import (
-    SceneConfig, absrel, ground_truth_depth, make_scene, make_trajectory,
-    simulate_events, slice_trajectory,
+    EVENT_CORRUPTIONS, SceneConfig, absrel, corrupt_stream,
+    ground_truth_depth, make_scene, make_trajectory, simulate_events,
+    slice_trajectory,
 )
+from repro.events.stream_hygiene import HygieneConfig, StreamHygieneError
 from repro.serving.emvs_stream import (
-    EMVSStreamEngine, MultiStreamEngine, StreamConfig, iter_event_chunks,
+    EMVSStreamEngine, HYGIENE_POLICIES, MemoryBudgetError, MultiStreamEngine,
+    StreamConfig, _FrameStore, iter_event_chunks,
 )
+
+
+def frame_budget_bytes(n_frames: int) -> int:
+    """Byte budget equivalent to holding `n_frames` aggregated frames."""
+    one = _FrameStore._frame_bytes(
+        np.zeros((EVENTS_PER_FRAME, 2), np.float32),
+        np.zeros(EVENTS_PER_FRAME, bool), np.float32(0.0),
+        np.zeros((3, 3), np.float32), np.zeros(3, np.float32))
+    return n_frames * one
 
 
 def run_multi(args, cam, scene, traj, dsi_cfg, opts) -> None:
@@ -165,6 +196,30 @@ def main() -> None:
                          "(different sensor noise), round-robin chunk "
                          "interleave, cross-stream coalescing on the shared "
                          "dispatcher (default: 1, single-stream engine)")
+    ap.add_argument("--hygiene", default="raise", choices=HYGIENE_POLICIES,
+                    help="ingest guard policy for adversarial chunks: raise "
+                         "= typed errors (default), drop = shed offenders, "
+                         "reorder = absorb misordering within "
+                         "--reorder-slack, off = no guard")
+    ap.add_argument("--reorder-slack", type=float, default=0.0,
+                    help="reorder-buffer depth in seconds (hygiene=reorder): "
+                         "events are held until the max observed time moves "
+                         "this far past them")
+    ap.add_argument("--hot-pixel-limit", type=int, default=None,
+                    help="max events per pixel per 50 ms window before the "
+                         "hot-pixel guard trips (default: unlimited)")
+    ap.add_argument("--corrupt", default=None, choices=EVENT_CORRUPTIONS,
+                    help="fault-inject one corruption mode into the stream "
+                         "and demo the hygiene response")
+    ap.add_argument("--budget-frames", type=int, default=None,
+                    help="cap the frame store at this many frames' bytes; "
+                         "admission stalls or rejects per --budget-policy "
+                         "(default: unbounded)")
+    ap.add_argument("--budget-policy", default="stall",
+                    choices=["stall", "reject"],
+                    help="over-budget admission: stall = back-pressure until "
+                         "a queued segment drains, reject = raise "
+                         "MemoryBudgetError (frames kept; poll() retries)")
     ap.add_argument("--out", default="/tmp/emvs_stream.npz")
     args = ap.parse_args()
     if args.sessions < 1:
@@ -185,17 +240,31 @@ def main() -> None:
     if args.max_stall is not None and not pose_gated:
         ap.error("--max-stall requires --pose-lag: the stall bound only "
                  "applies to a streamed (pose-gated) trajectory")
+    if args.corrupt and pose_gated:
+        ap.error("--corrupt demos the ingest guard on the plain event "
+                 "stream; use it without --pose-lag")
     if args.sessions > 1:
         if pose_gated:
             ap.error("--pose-lag demos the pose-gated tracker model on a "
                      "single stream; use --sessions 1")
+        if args.corrupt:
+            ap.error("--corrupt demos the single-stream ingest guard; "
+                     "use --sessions 1")
         run_multi(args, cam, scene, traj, dsi_cfg, opts)
         return
     engine = EMVSStreamEngine(cam, dsi_cfg, None if pose_gated else traj,
                               opts, StreamConfig(
                                   sweep=args.sweep,
                                   dispatch_policy=args.policy,
-                                  max_stalled_frames=args.max_stall))
+                                  max_stalled_frames=args.max_stall,
+                                  hygiene=HygieneConfig(
+                                      policy=args.hygiene,
+                                      reorder_slack=args.reorder_slack,
+                                      hot_pixel_limit=args.hot_pixel_limit),
+                                  frame_store_budget_bytes=(
+                                      frame_budget_bytes(args.budget_frames)
+                                      if args.budget_frames else None),
+                                  budget_policy=args.budget_policy))
     t0 = time.time()
 
     def report(seg, when):
@@ -218,14 +287,47 @@ def main() -> None:
         lo, pose_sent = pose_sent, hi
         return engine.push_poses(slice_trajectory(traj, lo, hi))
 
+    chunk_events = args.chunk_frames * EVENTS_PER_FRAME
+    if args.corrupt:
+        chunks = corrupt_stream(events, args.corrupt, chunk_events, seed=0,
+                                width=cam.width, height=cam.height)
+        print(f"fault injection: {args.corrupt} (mid-stream), "
+              f"hygiene={args.hygiene}")
+    else:
+        chunks = iter_event_chunks(events, chunk_events)
+
+    def guarded_push(chunk):
+        """push with the reject-policy recovery loop: on MemoryBudgetError
+        the frames are retained in the backlog; poll() retries admission."""
+        try:
+            return engine.push(chunk)
+        except MemoryBudgetError:
+            if args.budget_policy != "reject":
+                raise
+            print(f"  budget reject (backlog "
+                  f"{engine.stats['backlog_frames']} frame(s)); retrying "
+                  f"via poll()")
+            for _ in range(1000):
+                segs = engine.poll()
+                if not engine.stats["backlog_frames"]:
+                    return segs
+            raise
+
     print("streaming..." + (f" (pose stream lagging {args.pose_lag}s)"
                             if pose_gated else ""))
-    for chunk in iter_event_chunks(events, args.chunk_frames * EVENTS_PER_FRAME):
-        for seg in engine.push(chunk):
-            report(seg, time.time() - t0)
-        if pose_gated:
-            for seg in push_poses_behind(float(np.asarray(chunk.t)[-1])):
+    try:
+        for chunk in chunks:
+            for seg in guarded_push(chunk):
                 report(seg, time.time() - t0)
+            if pose_gated:
+                for seg in push_poses_behind(float(np.asarray(chunk.t)[-1])):
+                    report(seg, time.time() - t0)
+    except StreamHygieneError as e:
+        print(f"stream REJECTED by hygiene={args.hygiene!r}: "
+              f"{type(e).__name__}: {e}")
+        print("(policies 'drop'/'reorder' shed or absorb instead; "
+              "this is the fail-loud default)")
+        return
     if pose_gated:
         # tracker drains: deliver the remaining poses, then close the stream
         # (segments completed by the drain burst are reported here, not lost)
@@ -249,16 +351,39 @@ def main() -> None:
           f"segment(s) coalesced into "
           f"{engine.stats['coalesced_dispatches']} batched dispatch(es), "
           f"peak queue depth {engine.stats['max_pending']}")
+    h = engine.stats["hygiene"]
+    if args.hygiene != "off":
+        shed = (h["dropped_out_of_order"] + h["dropped_duplicate_events"]
+                + h["dropped_out_of_bounds"] + h["dropped_hot_pixel"])
+        print(f"hygiene={args.hygiene}: {h['events_in']} events in, "
+              f"{shed} shed, peak reorder hold "
+              f"{h['reorder_peak_held']} event(s)")
+    if args.budget_frames:
+        print(f"budget={args.budget_frames} frame(s): peak frame store "
+              f"{engine.stats['frame_store_peak_bytes']} / "
+              f"{frame_budget_bytes(args.budget_frames)} bytes, "
+              f"{engine.stats['budget_stalls']} stall(s), "
+              f"{engine.stats['budget_rejects']} reject(s)")
 
-    # the streamed reconstruction is the offline one, segment for segment
-    ref = run_emvs(cam, dsi_cfg,
-                   aggregate(cam, events, traj, EVENTS_PER_FRAME), opts)
-    assert [s.frame_range for s in res.segments] == \
-        [s.frame_range for s in ref.segments]
-    worst = max((float(np.abs(np.asarray(a.dsi, np.float32)
-                              - np.asarray(b.dsi, np.float32)).max())
-                 for a, b in zip(res.segments, ref.segments)), default=0.0)
-    print(f"offline equivalence: max |DSI_stream - DSI_offline| = {worst:g}")
+    # the streamed reconstruction is the offline one, segment for segment —
+    # unless the stream was corrupted and the policy sheds (drop) or
+    # ignores (off) the faults rather than absorbing them bitwise (reorder)
+    if args.corrupt and args.hygiene != "reorder":
+        print(f"offline equivalence skipped: the {args.corrupt} stream "
+              + ("was shed down to a clean subset"
+                 if args.hygiene == "drop" else
+                 "went in UNGUARDED — results are not trustworthy"))
+    else:
+        ref = run_emvs(cam, dsi_cfg,
+                       aggregate(cam, events, traj, EVENTS_PER_FRAME), opts)
+        assert [s.frame_range for s in res.segments] == \
+            [s.frame_range for s in ref.segments]
+        worst = max((float(np.abs(np.asarray(a.dsi, np.float32)
+                                  - np.asarray(b.dsi, np.float32)).max())
+                     for a, b in zip(res.segments, ref.segments)),
+                    default=0.0)
+        print(f"offline equivalence: max |DSI_stream - DSI_offline| = "
+              f"{worst:g}")
 
     cloud = concatenate(res.clouds)
     cloud = radius_outlier_filter(cloud, radius=0.08, min_neighbors=2)

@@ -1,5 +1,9 @@
 """Event data pipeline: simulator, streaming correction, incremental
 aggregation (`StreamingAggregator` carries partial frames across chunks),
-and the streamed trajectory (`trajectory_stream.TrajectoryBuffer`: pose
+the streamed trajectory (`trajectory_stream.TrajectoryBuffer`: pose
 chunks in, pose-lag watermark out; frames past the watermark stall until
-their bracketing poses arrive — never silently extrapolated)."""
+their bracketing poses arrive — never silently extrapolated), and ingest
+hygiene (`stream_hygiene.StreamHygiene`: adversarial chunks — misordered,
+overlapping, duplicate, out-of-bounds, hot-pixel storms — raise typed
+errors, shed offenders, or reorder within a bounded slack;
+`simulator.corrupt_stream` fault-injects exactly those modes)."""

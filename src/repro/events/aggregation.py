@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.camera import CameraModel, undistort_events
 from repro.core.geometry import SE3
 from repro.events.simulator import EventStream, Trajectory
+from repro.events.stream_hygiene import check_chunk_monotone
 from repro.events.trajectory_stream import (
     POSE_EXTRAPOLATION_POLICIES,
     PoseExtrapolationError,
@@ -185,6 +186,7 @@ class StreamingAggregator:
         self._rem_xy = np.zeros((0, 2), np.float32)
         self._rem_t = np.zeros((0,), np.float32)
         self._rem_valid = np.zeros((0,), bool)
+        self._last_t = float("-inf")
         self._stalled: deque[_StalledFrame] = deque()
         self._pose_final = False
 
@@ -216,7 +218,24 @@ class StreamingAggregator:
         return float(self._traj_times_host[-1])
 
     def push(self, chunk: EventStream) -> EventFrames:
-        """Ingest a chunk (sorted, contiguous with prior pushes) of events."""
+        """Ingest a chunk (sorted, contiguous with prior pushes) of events.
+
+        The sorted/contiguous contract is enforced, not assumed: a chunk
+        with non-monotone timestamps, or one starting before the last
+        pushed timestamp, raises a `ValueError`
+        (`NonMonotoneEventError` / `StreamOverlapError`) naming the
+        first offending index — a frame aggregated from misordered
+        events would get a wrong mid-time and vote under a wrong pose,
+        silently. Streams that need tolerance (drop, bounded reorder)
+        should go through `events.stream_hygiene.StreamHygiene` (the
+        streaming engine's `StreamConfig(hygiene=...)` does) before
+        this backstop.
+        """
+        t_chunk = np.asarray(chunk.t, np.float32)
+        check_chunk_monotone(t_chunk, self._last_t,
+                             context="StreamingAggregator.push")
+        if t_chunk.shape[0]:
+            self._last_t = float(t_chunk[-1])
         xy = (undistort_events(self.cam, chunk.xy)
               if self.cam.has_distortion() else chunk.xy)
         xy = np.concatenate([self._rem_xy, np.asarray(xy, np.float32)])

@@ -213,6 +213,123 @@ def simulate_events(
     return EventStream(xy=xy.astype(jnp.float32), t=tt, polarity=pp, valid=vv)
 
 
+EVENT_CORRUPTIONS = ("shuffle_events", "swap_chunks", "duplicate_chunk",
+                     "out_of_bounds", "hot_pixel")
+
+
+def corrupt_stream(stream: EventStream, mode: str, chunk_events: int, *,
+                   seed: int = 0, width: int | None = None,
+                   height: int | None = None,
+                   burst: int = 32) -> list[EventStream]:
+    """Fault injection: chunk a clean stream, then break one thing.
+
+    Returns the stream split into host-side chunks of `chunk_events`
+    with exactly one adversarial corruption applied — the noise modes
+    the event-vision survey (Gallego et al., arXiv 1904.08405) catalogs
+    for production ingest, shaped so `stream_hygiene` tests can assert
+    the precise expected response per policy:
+
+      * `"shuffle_events"` — one mid-stream chunk's events permuted
+        (misordered transport). Detectable as non-monotone; fully
+        reversible by a reorder slack covering the chunk's time span.
+      * `"swap_chunks"` — two adjacent chunks delivered in the wrong
+        order (packet reordering). The late chunk regresses behind the
+        watermark; reversible by a slack covering both chunks' span.
+      * `"duplicate_chunk"` — one chunk replayed byte-identically right
+        after itself (retrying link). Dropping the replay restores the
+        clean stream bit-exactly.
+      * `"out_of_bounds"` — a few spurious events marked valid injected
+        at off-sensor coordinates (requires `width`/`height`), at
+        timestamps tied to their insertion point so ordering stays
+        legal. Dropping them restores the clean stream bit-exactly.
+      * `"hot_pixel"` — a `burst` of events at one in-bounds pixel and
+        one timestamp spliced into a mid-stream chunk (a storming
+        sensel; requires `width`/`height`). Any per-window rate limit
+        below `burst` catches it.
+
+    Injection sites are chosen from `seed` (deterministic). Dropped
+    *pose* chunks — the fourth adversarial mode the roadmap names —
+    live on the trajectory side: drop chunks from
+    `iter_trajectory_chunks` and the pose-stall machinery
+    (`PoseStallError`) takes over, so no event-side corruption exists
+    for it here.
+    """
+    if mode not in EVENT_CORRUPTIONS:
+        raise ValueError(f"unknown corruption mode {mode!r}: expected one "
+                         f"of {EVENT_CORRUPTIONS}")
+    if chunk_events < 1:
+        raise ValueError(f"chunk_events must be >= 1, got {chunk_events}")
+    if mode in ("out_of_bounds", "hot_pixel") and (width is None
+                                                   or height is None):
+        raise ValueError(f"mode {mode!r} needs the sensor size: pass "
+                         f"width= and height=")
+    xy = np.asarray(stream.xy, np.float32)
+    t = np.asarray(stream.t, np.float32)
+    pol = np.asarray(stream.polarity, np.int8)
+    val = np.asarray(stream.valid, bool)
+    chunks = [EventStream(xy=xy[i:i + chunk_events], t=t[i:i + chunk_events],
+                          polarity=pol[i:i + chunk_events],
+                          valid=val[i:i + chunk_events])
+              for i in range(0, t.shape[0], chunk_events)]
+    if not chunks:
+        raise ValueError("cannot corrupt an empty stream")
+    rng = np.random.default_rng(seed)
+    k = len(chunks) // 2  # a mid-stream site: past warm-up, before flush
+    c = chunks[k]
+    nc = int(c.t.shape[0])
+    if mode == "shuffle_events":
+        if nc < 2 or np.unique(c.t).size < 2:
+            raise ValueError("shuffle_events needs a chunk with >= 2 "
+                             "distinct timestamps")
+        # Permute, but keep tied timestamps in their original relative
+        # order: hygiene's reorder buffer restores sort with a *stable*
+        # sort, which can only reproduce the clean chunk bit-exactly if
+        # the corruption never reordered within a tie group.
+        while True:
+            perm = rng.permutation(nc)
+            vals = c.t[perm]
+            _, inv = np.unique(vals, return_inverse=True)
+            for g in range(int(inv.max()) + 1):
+                pos = np.flatnonzero(inv == g)
+                if pos.size > 1:
+                    perm[pos] = np.sort(perm[pos])
+            if not np.array_equal(perm, np.arange(nc)):  # reject no-ops
+                break
+        chunks[k] = EventStream(xy=c.xy[perm], t=c.t[perm],
+                                polarity=c.polarity[perm],
+                                valid=c.valid[perm])
+    elif mode == "swap_chunks":
+        if len(chunks) < 2:
+            raise ValueError("swap_chunks needs >= 2 chunks")
+        j = min(k, len(chunks) - 2)
+        chunks[j], chunks[j + 1] = chunks[j + 1], chunks[j]
+    elif mode == "duplicate_chunk":
+        chunks.insert(k + 1, EventStream(
+            xy=c.xy.copy(), t=c.t.copy(), polarity=c.polarity.copy(),
+            valid=c.valid.copy()))
+    elif mode == "out_of_bounds":
+        m = min(4, nc)
+        pos = np.sort(rng.integers(1, nc + 1, size=m))
+        off_x = np.where(rng.random(m) < 0.5, -7.0, float(width) + 3.0)
+        inj_xy = np.stack(
+            [off_x, rng.uniform(0, height - 1, m)], axis=1).astype(np.float32)
+        chunks[k] = EventStream(
+            xy=np.insert(c.xy, pos, inj_xy, axis=0),
+            t=np.insert(c.t, pos, c.t[pos - 1]),
+            polarity=np.insert(c.polarity, pos, np.ones(m, np.int8)),
+            valid=np.insert(c.valid, pos, np.ones(m, bool)))
+    elif mode == "hot_pixel":
+        p = max(1, nc // 2)
+        px = np.asarray([rng.integers(0, width), rng.integers(0, height)],
+                        np.float32)
+        chunks[k] = EventStream(
+            xy=np.insert(c.xy, p, np.tile(px, (burst, 1)), axis=0),
+            t=np.insert(c.t, p, np.full(burst, c.t[p - 1], np.float32)),
+            polarity=np.insert(c.polarity, p, np.ones(burst, np.int8)),
+            valid=np.insert(c.valid, p, np.ones(burst, bool)))
+    return chunks
+
+
 def ground_truth_depth(cam: CameraModel, scene_points: np.ndarray, T_w_ref: SE3
                        ) -> tuple[Array, Array]:
     """Z-buffer the scene points into the reference view.

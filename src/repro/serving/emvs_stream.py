@@ -106,18 +106,33 @@ from repro.core.pipeline import (
 )
 from repro.events.aggregation import EVENTS_PER_FRAME
 from repro.events.simulator import EventStream, Trajectory
+from repro.events.stream_hygiene import (
+    HYGIENE_POLICIES,
+    HygieneConfig,
+    StreamHygieneError,
+)
 from repro.events.trajectory_stream import (
     POSE_EXTRAPOLATION_POLICIES,
     TrajectoryBuffer,
 )
-from repro.serving.stream_session import StreamSession, _FrameStore
+from repro.serving.stream_session import (
+    BUDGET_POLICIES,
+    MemoryBudgetError,
+    StreamSession,
+    _FrameStore,
+)
 from repro.serving.sweep_dispatcher import SweepDispatcher, _InFlight
 
 __all__ = [
+    "BUDGET_POLICIES",
     "DISPATCH_POLICIES",
     "EMVSStreamEngine",
+    "HYGIENE_POLICIES",
+    "HygieneConfig",
+    "MemoryBudgetError",
     "MultiStreamEngine",
     "StreamConfig",
+    "StreamHygieneError",
     "StreamSession",
     "SweepDispatcher",
     "iter_event_chunks",
@@ -165,6 +180,39 @@ class StreamConfig:
     produces bit-identical results on the nearest/integer datapaths
     (tests/test_adaptive_dispatch.py) — these knobs trade latency for
     throughput, never numerics.
+
+    Ingest hygiene: `hygiene` guards every pushed event chunk against
+    the adversarial stream modes production ingest sees (non-monotone
+    timestamps, overlap/regression vs prior pushes, exact-duplicate
+    chunks, out-of-bounds coordinates, hot-pixel storms — the
+    event-vision survey's noise taxonomy). Pass a policy string —
+    "raise" (default: typed `StreamHygieneError` subclasses naming the
+    first offending index, the chunk rejected atomically), "drop" (warn
+    + discard exactly the offenders, counted in
+    `stats["hygiene"]`), "reorder" (bounded reorder buffer restoring
+    sort order, bit-identical to a pre-sorted stream within the slack),
+    or "off" (trust the feed) — or a full
+    `repro.events.stream_hygiene.HygieneConfig` to set the reorder
+    slack, the per-pixel rate limit, or the duplicate-detection history.
+
+    Memory budget: `frame_store_budget_bytes` caps each session's host
+    frame-store `live_bytes` (None = uncapped). Admission happens
+    BEFORE a frame enters the store, so the cap is never exceeded — not
+    even transiently. When the next frame does not fit, `budget_policy`
+    decides: "stall" (default) applies back-pressure like
+    `max_stalled_frames` — the push blocks while the dispatcher makes
+    room (harvest completed sweeps, dispatch this session's queued
+    segments to raise its eviction floor, evict) and only raises
+    `MemoryBudgetError` when the budget cannot hold even the open
+    segment's working set (frames below the retention floor — queued
+    dispatches and the planner's open segment — are NEVER evicted, the
+    floor `SweepDispatcher._evict_all` enforces); "reject" never
+    blocks — the push raises `MemoryBudgetError` once non-blocking
+    room-making fails, with the frames buffered in an admission backlog
+    FIRST (the `PoseStallError` recovery contract: nothing is lost,
+    `poll()` retries admission as sweeps complete, `flush()` drains).
+    The budget is per session; N sessions of a `MultiStreamEngine`
+    each get the full value.
 
     Shared vs per-session: one `StreamConfig` (with the camera model,
     DSI config and `EMVSOptions`) is shared by every session of a
@@ -222,6 +270,17 @@ class StreamConfig:
     # PoseExtrapolationError, "clamp" is the seed's silent freeze (kept
     # for explicit opt-in only).
     pose_extrapolation: str = "warn"
+    # Ingest-hygiene policy (HYGIENE_POLICIES) or a full HygieneConfig —
+    # how adversarial event chunks are met (see the class docstring).
+    hygiene: str | HygieneConfig = "raise"
+    # Per-session cap on the host frame store's live_bytes (None =
+    # uncapped); enforced BEFORE admission, so it is never exceeded.
+    frame_store_budget_bytes: int | None = None
+    # What a push does when the next frame does not fit under the budget
+    # (BUDGET_POLICIES): "stall" = block while the dispatcher makes
+    # room; "reject" = raise MemoryBudgetError with the frames buffered
+    # first (recover via poll/flush).
+    budget_policy: str = "stall"
 
     def __post_init__(self):
         if not self.segment_buckets:
@@ -253,6 +312,24 @@ class StreamConfig:
                 f"unknown pose_extrapolation policy "
                 f"{self.pose_extrapolation!r}: expected one of "
                 f"{POSE_EXTRAPOLATION_POLICIES}")
+        if isinstance(self.hygiene, str):
+            if self.hygiene not in HYGIENE_POLICIES:
+                raise ValueError(
+                    f"unknown hygiene policy {self.hygiene!r}: expected "
+                    f"one of {HYGIENE_POLICIES} or a HygieneConfig")
+        elif not isinstance(self.hygiene, HygieneConfig):
+            raise ValueError(
+                f"hygiene must be a policy string ({HYGIENE_POLICIES}) or "
+                f"a HygieneConfig, got {type(self.hygiene).__name__}")
+        if (self.frame_store_budget_bytes is not None
+                and self.frame_store_budget_bytes < 1):
+            raise ValueError(
+                f"frame_store_budget_bytes must be >= 1 (or None for "
+                f"uncapped), got {self.frame_store_budget_bytes}")
+        if self.budget_policy not in BUDGET_POLICIES:
+            raise ValueError(
+                f"unknown budget_policy {self.budget_policy!r}: expected "
+                f"one of {BUDGET_POLICIES}")
 
 
 def iter_event_chunks(stream: EventStream, chunk_events: int):

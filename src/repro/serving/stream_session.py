@@ -29,7 +29,35 @@ from repro.core.pipeline import EMVSResult, SegmentPlanner, SegmentResult
 from repro.core.pointcloud import PointCloud
 from repro.events.aggregation import EventFrames, StreamingAggregator
 from repro.events.simulator import EventStream, Trajectory
+from repro.events.stream_hygiene import HygieneConfig, StreamHygiene
 from repro.events.trajectory_stream import PoseStallError, TrajectoryBuffer
+
+# How StreamConfig(frame_store_budget_bytes=...) responds when admitting
+# the next aggregated frame would put _FrameStore.live_bytes over budget:
+#   * "stall"  — back-pressure, like max_stalled_frames on the pose side:
+#     the push blocks while the dispatcher makes room (dispatching this
+#     session's queued segments raises its eviction floor; completed
+#     sweeps are block-harvested to free dispatch slots). Only when no
+#     progress is possible — the *open segment's* working set alone
+#     exceeds the budget, and open-segment frames can never be evicted —
+#     does the push raise `MemoryBudgetError` (a configuration error:
+#     raise the budget or close segments sooner).
+#   * "reject" — never block: the push raises `MemoryBudgetError` as soon
+#     as non-blocking room-making (harvest-ready + evict + dispatch into
+#     free slots) cannot fit the frame. The frames are buffered in the
+#     admission backlog FIRST, so nothing is lost — a later `poll()`
+#     retries admission quietly as results harvest, and `flush()` drains
+#     everything (blocking is inherent to a drain).
+BUDGET_POLICIES = ("stall", "reject")
+
+
+class MemoryBudgetError(RuntimeError):
+    """A session's frame-store byte budget cannot admit the next frame.
+
+    Raised per `StreamConfig(budget_policy=...)` — see `BUDGET_POLICIES`.
+    The offending frames are buffered in the session's admission backlog
+    before the raise, so no events are lost: `poll()` retries admission
+    non-blocking, `flush()` drains fully."""
 
 
 class _FrameStore:
@@ -62,6 +90,17 @@ class _FrameStore:
                      r: np.ndarray, t: np.ndarray) -> int:
         return (xy.nbytes + valid.nbytes + t_mid.nbytes + r.nbytes + t.nbytes)
 
+    def append_frame(self, xy: np.ndarray, valid: np.ndarray,
+                     t_mid: np.ndarray, r: np.ndarray,
+                     t: np.ndarray) -> None:
+        self._xy.append(xy)
+        self._valid.append(valid)
+        self._t_mid.append(t_mid)
+        self._R.append(r)
+        self._t.append(t)
+        self.live_bytes += self._frame_bytes(xy, valid, t_mid, r, t)
+        self.peak_bytes = max(self.peak_bytes, self.live_bytes)
+
     def extend(self, frames: EventFrames) -> None:
         xy = np.asarray(frames.xy)
         valid = np.asarray(frames.valid)
@@ -69,14 +108,7 @@ class _FrameStore:
         r = np.asarray(frames.poses.R)
         t = np.asarray(frames.poses.t)
         for k in range(xy.shape[0]):
-            self._xy.append(xy[k])
-            self._valid.append(valid[k])
-            self._t_mid.append(t_mid[k])
-            self._R.append(r[k])
-            self._t.append(t[k])
-            self.live_bytes += self._frame_bytes(xy[k], valid[k], t_mid[k],
-                                                 r[k], t[k])
-        self.peak_bytes = max(self.peak_bytes, self.live_bytes)
+            self.append_frame(xy[k], valid[k], t_mid[k], r[k], t[k])
 
     def window(self, lo: int, hi: int) -> EventFrames:
         """Host EventFrames covering global frames [lo, hi)."""
@@ -149,6 +181,22 @@ class StreamSession:
         self.planner = SegmentPlanner(
             mean_depth * dispatcher.opts.keyframe_dist_frac, min_frames=2)
         self._store = _FrameStore()
+        # Ingest hygiene: every event chunk is scrubbed against the
+        # stream watermark before it reaches the aggregator (policy per
+        # StreamConfig.hygiene; the camera model supplies the sensor
+        # bounds for the out-of-bounds check).
+        hyg = cfg.hygiene
+        if not isinstance(hyg, HygieneConfig):
+            hyg = HygieneConfig(policy=hyg)
+        self.hygiene = StreamHygiene(hyg, width=dispatcher.cam.width,
+                                     height=dispatcher.cam.height)
+        # Memory budget: frames emitted by the aggregator pass through an
+        # admission backlog before entering the frame store, so
+        # live_bytes NEVER exceeds the budget (checked before append,
+        # see _drain_backlog / BUDGET_POLICIES).
+        self._budget = cfg.frame_store_budget_bytes
+        self._budget_policy = cfg.budget_policy
+        self._backlog: deque[tuple] = deque()  # per-frame (xy,valid,t_mid,R,t)
         self._fresh: list[SegmentResult] = []  # harvested, not yet polled
         self._done: dict[tuple[int, int], tuple[SegmentResult, PointCloud]] = {}
         self._flushed = False
@@ -156,11 +204,15 @@ class StreamSession:
         # Ingestion-side counters; the dispatcher owns the shared dispatch
         # counters and attributes "segments" (dispatched, owned by this
         # session) back here. Same identities as the single-stream engine.
+        # "hygiene" aliases the guard's live stats dict; "budget_stalls" /
+        # "budget_rejects" / "backlog_frames" track the admission policy.
         self.stats = {"chunks": 0, "empty_chunks": 0, "frames": 0,
                       "segments": 0, "pose_chunks": 0, "stalled_frames": 0,
                       "max_stalled": 0,
                       "pose_watermark": self.aggregator.pose_watermark,
-                      "frame_store_bytes": 0, "frame_store_peak_bytes": 0}
+                      "frame_store_bytes": 0, "frame_store_peak_bytes": 0,
+                      "budget_stalls": 0, "budget_rejects": 0,
+                      "backlog_frames": 0, "hygiene": self.hygiene.stats}
         dispatcher.register(self)
 
     # --- ingest -----------------------------------------------------------
@@ -185,7 +237,13 @@ class StreamSession:
         that became ready (without blocking — completed sweeps only). In
         pose-gated mode, frames whose mid-time lies past the pose
         watermark stall inside the aggregator and surface on a later
-        `push_poses`."""
+        `push_poses`.
+
+        The chunk passes through this session's `StreamHygiene` guard
+        first (`StreamConfig.hygiene`): an adversarial chunk raises a
+        typed `StreamHygieneError` subclass / sheds offenders / waits in
+        the reorder buffer per the policy, BEFORE any session state is
+        touched — a hygiene raise leaves the session exactly as it was."""
         if self._flushed or self._tail_flushed:
             # once flush() has consumed the aggregator's tail remainder —
             # including a flush that then raised PoseStallError — more
@@ -195,6 +253,7 @@ class StreamSession:
                 "push after flush: the event tail was already emitted "
                 "(only push_poses / finalize_poses / flush may follow)")
         n = self._validate_chunk(chunk)
+        chunk = self.hygiene.scrub(chunk)
         self.stats["chunks"] += 1
         if n == 0:
             # a legal no-op (e.g. a quiet sensor interval), but an easy
@@ -250,21 +309,93 @@ class StreamSession:
         self.stats["frame_store_bytes"] = self._store.live_bytes
         self.stats["frame_store_peak_bytes"] = self._store.peak_bytes
 
-    def _ingest(self, frames: EventFrames) -> None:
+    def _ingest(self, frames: EventFrames, *,
+                blocking: bool | None = None) -> None:
         n = int(frames.xy.shape[0])
         if n == 0:
             return
         self.stats["frames"] += n
-        self._store.extend(frames)
-        self._sync_store_stats()
-        closed: list[tuple[int, int]] = []
-        t_host = np.asarray(frames.poses.t)
+        if self._budget is None:
+            self._store.extend(frames)
+            self._sync_store_stats()
+            closed: list[tuple[int, int]] = []
+            t_host = np.asarray(frames.poses.t)
+            for k in range(n):
+                seg = self.planner.push(t_host[k])
+                if seg is not None:
+                    closed.append(seg)
+            if closed:
+                self.dispatcher.enqueue(self, closed)
+            self.dispatcher.pump()
+            return
+        # budgeted admission: frames queue in the backlog and enter the
+        # store one at a time, each admitted only once it fits under the
+        # budget — live_bytes can never exceed it
+        xy = np.asarray(frames.xy)
+        valid = np.asarray(frames.valid)
+        t_mid = np.asarray(frames.t_mid)
+        r = np.asarray(frames.poses.R)
+        t = np.asarray(frames.poses.t)
         for k in range(n):
-            seg = self.planner.push(t_host[k])
+            self._backlog.append((xy[k], valid[k], t_mid[k], r[k], t[k]))
+        if blocking is None:
+            blocking = self._budget_policy == "stall"
+        self._drain_backlog(blocking=blocking, raise_on_full=True)
+
+    def _drain_backlog(self, *, blocking: bool, raise_on_full: bool) -> None:
+        """Admit backlogged frames into the store under the byte budget.
+
+        Each frame is admitted only when `live_bytes + frame` fits; when
+        it does not, the dispatcher is asked to make room (harvest
+        completed sweeps, evict behind the retention floor, dispatch this
+        session's queued segments to RAISE that floor — never below it:
+        queued segments and the planner's open segment stay resident).
+        With `blocking` the room-making may block on in-flight sweeps
+        (the "stall" policy's back-pressure); without it the first
+        no-progress answer stops the drain — raising `MemoryBudgetError`
+        when `raise_on_full` (the "reject" policy's push path) or
+        returning quietly (poll's retry path). Admitted frames run the
+        planner and enqueue their closed segments immediately, so a
+        closed segment can free its own frames for the next admission."""
+        budget = self._budget
+        while self._backlog:
+            fb = self._backlog[0]
+            nbytes = _FrameStore._frame_bytes(*fb)
+            while self._store.live_bytes + nbytes > budget:
+                if self.dispatcher.make_room(self, blocking=blocking):
+                    self.stats["budget_stalls"] += 1
+                    continue
+                self.stats["backlog_frames"] = len(self._backlog)
+                if not raise_on_full:
+                    return
+                live = self._store.live_bytes
+                if not blocking:
+                    self.stats["budget_rejects"] += 1
+                    raise MemoryBudgetError(
+                        f"session {self.session_id!r}: admitting the next "
+                        f"{nbytes}-byte frame would put the frame store at "
+                        f"{live + nbytes} bytes, over the "
+                        f"{budget}-byte budget (policy 'reject'; "
+                        f"{len(self._backlog)} frame(s) held in the "
+                        f"admission backlog — nothing is lost: poll() "
+                        f"retries as sweeps complete, flush() drains)")
+                raise MemoryBudgetError(
+                    f"session {self.session_id!r}: frame-store budget "
+                    f"{budget} bytes cannot hold the open segment's "
+                    f"working set — {live} bytes are pinned by frames "
+                    f"that may not be evicted (the planner's open "
+                    f"segment / queued dispatches) and the next frame "
+                    f"needs {nbytes} more, with nothing left to dispatch "
+                    f"or harvest; raise the budget or close segments "
+                    f"sooner (larger keyframe_dist_frac means longer "
+                    f"segments)")
+            self._backlog.popleft()
+            self._store.append_frame(*fb)
+            self._sync_store_stats()
+            seg = self.planner.push(fb[4])
             if seg is not None:
-                closed.append(seg)
-        if closed:
-            self.dispatcher.enqueue(self, closed)
+                self.dispatcher.enqueue(self, [seg])
+        self.stats["backlog_frames"] = 0
         self.dispatcher.pump()
 
     # --- harvest ----------------------------------------------------------
@@ -278,7 +409,11 @@ class StreamSession:
         back-pressure harvests plus every in-flight sweep the device has
         finished. Freed in-flight slots let the shared coalescing queue
         drain, so a poll can also dispatch segments (of any session) the
-        adaptive policy was holding."""
+        adaptive policy was holding. Under a memory budget, frames a
+        rejected push left in the admission backlog retry admission here
+        (non-blocking, never raising) as completed sweeps free bytes."""
+        if self._backlog:
+            self._drain_backlog(blocking=False, raise_on_full=False)
         self.dispatcher.pump()
         return self._take_fresh()
 
@@ -301,7 +436,17 @@ class StreamSession:
             try:
                 if not self._tail_flushed:
                     self._tail_flushed = True
-                    self._ingest(self.aggregator.flush())
+                    # end of stream for the hygiene guard too: the
+                    # reorder buffer's held events precede the tail
+                    held = self.hygiene.flush()
+                    if held.t.shape[0]:
+                        self._ingest(self.aggregator.push(held),
+                                     blocking=True)
+                    self._ingest(self.aggregator.flush(), blocking=True)
+                if self._backlog:
+                    # frames a rejected push left behind: a drain is
+                    # inherently blocking under either budget policy
+                    self._drain_backlog(blocking=True, raise_on_full=True)
             finally:
                 # runs when the tail frame trips the max-stall bound too,
                 # so max_stalled records the true peak on the raise path

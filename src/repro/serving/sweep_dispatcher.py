@@ -165,6 +165,49 @@ class SweepDispatcher:
             sess._store.evict_before(floor)
             sess._sync_store_stats()
 
+    def make_room(self, session, blocking: bool) -> bool:
+        """Free retained frame-store bytes for `session`'s budget admission.
+
+        Returns True when progress was made (bytes freed, or queued work
+        dispatched so the next eviction can free them), False when no
+        more room can be made — without blocking when `blocking` is
+        False, or at all when True (everything dispatchable is
+        dispatched and the store already sits at its retention floor:
+        the planner's open segment, which may never be evicted — the
+        PR 5 bug class this floor exists to prevent).
+
+        Order of escalation: harvest device-completed sweeps and evict
+        behind the floor (free); then dispatch the session's queued
+        segments — dispatch stages its rows immediately, so each
+        dispatched group RAISES the session's eviction floor past its
+        segments; when the in-flight queue is full, dispatching means
+        block-harvesting the oldest sweep first, which only the "stall"
+        policy (blocking=True) may do."""
+        before = session._store.live_bytes
+        self._harvest_ready()
+        self._evict_all()
+        if session._store.live_bytes < before:
+            return True
+        while True:
+            if len(self._inflight) >= self.stream_cfg.max_inflight:
+                self._harvest_ready()  # a sweep may have completed by now
+            if len(self._inflight) >= self.stream_cfg.max_inflight:
+                # dispatching now would hit _dispatch's blocking
+                # back-pressure on the oldest in-flight sweep
+                if not blocking:
+                    return False
+                self._harvest(self._inflight.popleft(), block=True)
+            group = self._pop_group(final=True, only=session)
+            if group is None:
+                return False
+            self._dispatch(*group)
+            self._note_queue_depth()
+            self._evict_all()
+            if session._store.live_bytes < before:
+                return True
+            # dispatched but nothing freed yet (the floor is still
+            # pinned by further queued segments): keep dispatching
+
     # --- dispatch (double-buffered, policy- and fairness-scheduled) -------
 
     def pump(self) -> None:

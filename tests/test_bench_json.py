@@ -1,0 +1,105 @@
+"""BENCH_emvs.json writer contracts: atomic replace + dry-run isolation.
+
+`update_bench_json` is shared by every benchmark and read by the CI
+gates, so its two hygiene rules get their own tests: a crashing or
+concurrent write can never tear the file (tempfile + os.replace), and a
+`--dry-run` record can never overwrite a full-size record at the top
+level (it lands under the "dry_run" namespace; legacy top-level dry-run
+records migrate there on the next write). `read_bench_section` is the
+matching lookup: full-run records first, the namespace as fallback.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+from _emvs_common import read_bench_section, update_bench_json  # noqa: E402
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_sections_merge_and_survive(tmp_path):
+    path = str(tmp_path / "bench.json")
+    update_bench_json("alpha", {"x": 1}, path=path)
+    update_bench_json("beta", {"y": 2}, path=path)
+    data = _load(path)
+    assert data["alpha"] == {"x": 1} and data["beta"] == {"y": 2}
+    # overwriting one section leaves the other intact
+    update_bench_json("alpha", {"x": 3}, path=path)
+    data = _load(path)
+    assert data["alpha"] == {"x": 3} and data["beta"] == {"y": 2}
+
+
+def test_write_is_atomic_no_temp_droppings(tmp_path):
+    """The target is replaced in one os.replace: no partial writes left
+    behind, and the tempfile is cleaned up on every path."""
+    path = str(tmp_path / "bench.json")
+    update_bench_json("alpha", {"x": list(range(1000))}, path=path)
+    assert [p.name for p in tmp_path.iterdir()] == ["bench.json"]
+    # a reader mid-update sees either the old or the new file — never a
+    # torn one; simulate by re-writing and checking full validity
+    update_bench_json("alpha", {"x": 0}, path=path)
+    assert _load(path)["alpha"] == {"x": 0}
+    assert [p.name for p in tmp_path.iterdir()] == ["bench.json"]
+
+
+def test_unserializable_record_leaves_file_intact(tmp_path):
+    path = str(tmp_path / "bench.json")
+    update_bench_json("alpha", {"x": 1}, path=path)
+    with pytest.raises(TypeError):
+        update_bench_json("beta", {"bad": object()}, path=path)
+    # the failed write neither corrupted the file nor left a tempfile
+    assert _load(path) == {"alpha": {"x": 1}}
+    assert [p.name for p in tmp_path.iterdir()] == ["bench.json"]
+
+
+def test_corrupt_file_is_replaced_not_fatal(tmp_path):
+    path = str(tmp_path / "bench.json")
+    with open(path, "w") as f:
+        f.write('{"alpha": {  TORN MID-WRITE')
+    update_bench_json("beta", {"y": 2}, path=path)
+    assert _load(path) == {"beta": {"y": 2}}
+
+
+def test_dry_run_records_cannot_shadow_full_runs(tmp_path):
+    """A dry-run record lands under data["dry_run"][section]; the
+    full-size record at data[section] is untouched — the smoke can no
+    longer poison the tracked perf trajectory."""
+    path = str(tmp_path / "bench.json")
+    update_bench_json("sweep", {"dry_run": False, "segs_per_s": 100.0},
+                      path=path)
+    update_bench_json("sweep", {"dry_run": True, "segs_per_s": 3.0},
+                      path=path)
+    data = _load(path)
+    assert data["sweep"]["segs_per_s"] == 100.0
+    assert data["dry_run"]["sweep"]["segs_per_s"] == 3.0
+    # read-back prefers the full-size record...
+    assert read_bench_section("sweep", path=path)["segs_per_s"] == 100.0
+    # ...and falls back to the namespace when no full run exists yet
+    update_bench_json("smoke_only", {"dry_run": True, "v": 1}, path=path)
+    assert read_bench_section("smoke_only", path=path) == {"dry_run": True,
+                                                           "v": 1}
+    assert read_bench_section("missing", path=path) is None
+
+
+def test_legacy_top_level_dry_run_records_migrate(tmp_path):
+    """Pre-namespace files have dry-run records at the top level (the
+    committed BENCH_emvs.json regression); the next write moves them."""
+    path = str(tmp_path / "bench.json")
+    with open(path, "w") as f:
+        json.dump({"old_sweep": {"dry_run": True, "v": 1},
+                   "full_sweep": {"dry_run": False, "v": 2}}, f)
+    update_bench_json("new", {"v": 3}, path=path)
+    data = _load(path)
+    assert "old_sweep" not in data
+    assert data["dry_run"]["old_sweep"] == {"dry_run": True, "v": 1}
+    assert data["full_sweep"]["v"] == 2  # full runs stay at the top level
+    assert data["new"] == {"v": 3}

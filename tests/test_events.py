@@ -250,3 +250,117 @@ def test_all_four_sequences_generate(cam):
         assert bool(ev.valid.any()), name
         frac_valid = float(ev.valid.mean())
         assert frac_valid > 0.3, (name, frac_valid)
+
+
+# --- ingest validation: the sorted/contiguous contract is enforced --------
+
+
+def test_aggregator_push_rejects_non_monotone_naming_index(cam, small_scene):
+    """A chunk with an intra-chunk timestamp regression must be rejected
+    with a ValueError naming the first offending event index — not
+    silently mis-binned into frames."""
+    from repro.events.stream_hygiene import NonMonotoneEventError
+
+    traj = small_scene["traj"]
+    agg = StreamingAggregator(cam, traj, events_per_frame=64)
+    t = np.float32([0.10, 0.11, 0.09, 0.12])
+    bad = EventStream(xy=jnp.zeros((4, 2), jnp.float32), t=jnp.asarray(t),
+                      polarity=jnp.ones((4,), jnp.int8),
+                      valid=jnp.ones((4,), bool))
+    with pytest.raises(NonMonotoneEventError, match=r"event 2 at"):
+        agg.push(bad)
+    assert isinstance(NonMonotoneEventError("x"), ValueError)
+
+
+def test_aggregator_push_rejects_overlapping_chunks(cam, small_scene):
+    """A chunk that regresses behind the previous push's last timestamp
+    overlaps time already committed — a typed ValueError, state intact."""
+    from repro.events.stream_hygiene import StreamOverlapError
+
+    ev, traj = small_scene["events"], small_scene["traj"]
+    agg = StreamingAggregator(cam, traj, events_per_frame=64)
+
+    def part(i, j):
+        return EventStream(xy=ev.xy[i:j], t=ev.t[i:j],
+                           polarity=ev.polarity[i:j], valid=ev.valid[i:j])
+
+    agg.push(part(0, 256))
+    with pytest.raises(StreamOverlapError, match="watermark"):
+        agg.push(part(128, 384))  # replays times 128..255
+    agg.push(part(256, 512))  # the rejection did not poison the stream
+    assert agg.pending_events == 512 % 64
+
+
+def test_offline_aggregate_rejects_unsorted_stream(cam, small_scene):
+    """aggregate() shares push()'s validation: an unsorted stream is a
+    loud error, not a silently scrambled frame tensor."""
+    ev, traj = small_scene["events"], small_scene["traj"]
+    perm = np.arange(int(ev.t.shape[0]))
+    perm[10], perm[20] = perm[20], perm[10]
+    bad = EventStream(xy=ev.xy[perm], t=ev.t[perm],
+                      polarity=ev.polarity[perm], valid=ev.valid[perm])
+    with pytest.raises(ValueError, match="non-monotone"):
+        aggregate(cam, bad, traj, events_per_frame=64)
+
+
+# --- chunk iterators: edge cases + bitwise reassembly ---------------------
+
+
+def test_iter_event_chunks_edge_cases(cam, small_scene):
+    from repro.serving.emvs_stream import iter_event_chunks
+
+    ev = small_scene["events"]
+    n = int(ev.t.shape[0])
+    # empty stream -> no chunks at all
+    empty = EventStream(xy=ev.xy[:0], t=ev.t[:0],
+                        polarity=ev.polarity[:0], valid=ev.valid[:0])
+    assert list(iter_event_chunks(empty, 128)) == []
+    # chunk larger than the stream -> exactly one chunk, the whole stream
+    whole = list(iter_event_chunks(ev, n + 999))
+    assert len(whole) == 1 and int(whole[0].t.shape[0]) == n
+    # ragged tail: n % chunk != 0 -> last chunk carries the remainder
+    chunk = 257
+    assert n % chunk != 0, "fixture must leave a ragged tail"
+    parts = list(iter_event_chunks(ev, chunk))
+    assert [int(p.t.shape[0]) for p in parts[:-1]] == [chunk] * (len(parts) - 1)
+    assert int(parts[-1].t.shape[0]) == n % chunk
+    # bitwise reassembly: concatenating the chunks is the identity
+    for field in ("xy", "t", "polarity", "valid"):
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(getattr(p, field)) for p in parts]),
+            np.asarray(getattr(ev, field)))
+    # invalid sizes are loud
+    for sz in (0, -1, 1.5, True):
+        with pytest.raises(ValueError):
+            list(iter_event_chunks(ev, sz))
+
+
+def test_iter_trajectory_chunks_edge_cases(small_scene):
+    from repro.events.simulator import Trajectory, iter_trajectory_chunks
+    from repro.core.geometry import SE3
+
+    traj = small_scene["traj"]
+    n = int(traj.times.shape[0])
+    # empty trajectory -> no chunks
+    empty = Trajectory(times=traj.times[:0],
+                       poses=SE3(traj.poses.R[:0], traj.poses.t[:0]))
+    assert list(iter_trajectory_chunks(empty, 4)) == []
+    # chunk larger than the trajectory -> one chunk, everything
+    whole = list(iter_trajectory_chunks(traj, n + 5))
+    assert len(whole) == 1 and int(whole[0].times.shape[0]) == n
+    # ragged tail + bitwise reassembly
+    chunk = 5
+    assert n % chunk != 0, "fixture must leave a ragged tail"
+    parts = list(iter_trajectory_chunks(traj, chunk))
+    assert int(parts[-1].times.shape[0]) == n % chunk
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.times) for p in parts]),
+        np.asarray(traj.times))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.poses.R) for p in parts]),
+        np.asarray(traj.poses.R))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.poses.t) for p in parts]),
+        np.asarray(traj.poses.t))
+    with pytest.raises(ValueError, match="chunk_poses"):
+        list(iter_trajectory_chunks(traj, 0))

@@ -1,0 +1,467 @@
+"""Adversarial ingest: stream hygiene + memory-budget admission.
+
+Two contracts from the hardened ingest path:
+
+  * Hygiene: every `simulator.corrupt_stream` fault (shuffled events,
+    swapped chunks, duplicate chunk, out-of-bounds pixels, hot-pixel
+    storm) through `StreamHygiene` and the full engine must be rejected
+    with a typed `StreamHygieneError` naming the offense, shed exactly
+    (policy "drop"), or absorbed bitwise (policy "reorder" within its
+    slack) — never silently corrupt a depth map.
+  * Budget: with `StreamConfig(frame_store_budget_bytes=...)` set,
+    `_FrameStore.live_bytes` never exceeds the budget — not even
+    transiently — under both admission policies ("stall" back-pressures,
+    "reject" raises `MemoryBudgetError` and retries on `poll`), while
+    results stay bitwise-equal to offline `run_emvs`; an infeasible
+    budget (below the largest segment's working set) is a typed fatal
+    error, never a deadlock or a silent eviction of queued frames.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dsi import DSIConfig
+from repro.core.pipeline import EMVSOptions, run_emvs
+from repro.events.aggregation import aggregate
+from repro.events.simulator import (
+    EVENT_CORRUPTIONS,
+    EventStream,
+    corrupt_stream,
+)
+from repro.events.stream_hygiene import (
+    DuplicateChunkError,
+    HotPixelError,
+    HygieneConfig,
+    NonMonotoneEventError,
+    OutOfBoundsEventError,
+    StreamHygiene,
+    StreamHygieneError,
+    StreamHygieneWarning,
+    StreamOverlapError,
+    check_chunk_monotone,
+)
+from repro.serving.emvs_stream import (
+    EMVSStreamEngine,
+    MemoryBudgetError,
+    StreamConfig,
+    _FrameStore,
+    iter_event_chunks,
+)
+from test_segment_batching import _assert_results_match
+
+EVENTS_PER_FRAME = 224
+W, H = 32, 24  # synthetic sensor for unit-level hygiene tests
+
+
+@pytest.fixture(scope="module")
+def hygiene_scene(cam, small_scene):
+    """A short stream (11 full frames + tail), its offline reference at
+    nearest voting (bitwise-comparable), and the DSI config."""
+    ev = small_scene["events"]
+    traj = small_scene["traj"]
+    keep = min(int(ev.t.shape[0]), 11 * EVENTS_PER_FRAME + 32)
+    ev = EventStream(xy=ev.xy[:keep], t=ev.t[:keep],
+                     polarity=ev.polarity[:keep], valid=ev.valid[:keep])
+    frames = aggregate(cam, ev, traj, events_per_frame=EVENTS_PER_FRAME)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=16, z_min=0.6, z_max=4.5)
+    opts = EMVSOptions(keyframe_dist_frac=0.03)
+    ref = run_emvs(cam, dsi_cfg, frames, opts)
+    assert len(ref.segments) >= 2, "scene must close several segments"
+    return ev, traj, dsi_cfg, opts, ref
+
+
+def _chunk(t, xy=None, pol=None, valid=None) -> EventStream:
+    t = np.asarray(t, np.float32)
+    n = t.shape[0]
+    if xy is None:
+        xy = np.stack([np.arange(n) % W, np.arange(n) % H], 1)
+    xy = np.asarray(xy, np.float32).reshape(n, 2)
+    pol = (np.ones(n, np.int8) if pol is None
+           else np.asarray(pol, np.int8))
+    valid = (np.ones(n, bool) if valid is None
+             else np.asarray(valid, bool))
+    return EventStream(xy=xy, t=t, polarity=pol, valid=valid)
+
+
+def _scrub_all(hyg: StreamHygiene, chunks) -> np.ndarray:
+    """Scrub + flush; returns the concatenated released timestamps."""
+    out = [hyg.scrub(c) for c in chunks]
+    out.append(hyg.flush())
+    return np.concatenate([np.asarray(o.t) for o in out if o.t.shape[0]]
+                          or [np.empty(0, np.float32)])
+
+
+# --- unit level: each check, each policy ----------------------------------
+
+
+def test_monotone_check_names_first_offender():
+    with pytest.raises(NonMonotoneEventError, match=r"event 3 at"):
+        check_chunk_monotone(np.float32([0.0, 1.0, 2.0, 1.5, 3.0]),
+                             float("-inf"))
+    # in-order chunks pass, including ties
+    check_chunk_monotone(np.float32([1.0, 1.0, 2.0]), 1.0)
+
+
+def test_watermark_regression_is_overlap():
+    with pytest.raises(StreamOverlapError, match="watermark"):
+        check_chunk_monotone(np.float32([0.5, 0.6]), 1.0)
+
+
+def test_duplicate_chunk_rejected_atomically():
+    hyg = StreamHygiene("raise", width=W, height=H)
+    c1 = _chunk([0.1, 0.2])
+    hyg.scrub(c1)
+    with pytest.raises(DuplicateChunkError, match="byte-identically"):
+        hyg.scrub(_chunk([0.1, 0.2]))
+    # the rejection touched no state: the next clean chunk still flows
+    hyg.scrub(_chunk([0.3, 0.4]))
+    assert hyg.watermark == np.float32(0.4)
+    assert hyg.stats["events_out"] == 4
+
+
+def test_out_of_bounds_rejected_naming_event():
+    hyg = StreamHygiene("raise", width=W, height=H)
+    bad = _chunk([0.1, 0.2, 0.3], xy=[[1, 1], [W + 3, 1], [2, 2]])
+    with pytest.raises(OutOfBoundsEventError, match=r"event 1 .*sensor"):
+        hyg.scrub(bad)
+    # parked/invalid events are exempt: only valid=True coords are checked
+    parked = _chunk([0.1, 0.2], xy=[[1, 1], [-1e4, -1e4]],
+                    valid=[True, False])
+    hyg.scrub(parked)
+    assert hyg.stats["events_out"] == 2
+
+
+def test_drop_sheds_exactly_the_offenders():
+    hyg = StreamHygiene("drop", width=W, height=H)
+    bad = _chunk([0.0, 1.0, 0.5, 2.0], xy=[[1, 1], [2, 2], [3, 3], [-7, 1]])
+    with pytest.warns(StreamHygieneWarning, match="dropped"):
+        out = hyg.scrub(bad)
+    # event 2 regresses (prefix-max), event 3 is out of bounds
+    assert np.asarray(out.t).tolist() == [0.0, 1.0]
+    assert hyg.stats["dropped_out_of_order"] == 1
+    assert hyg.stats["dropped_out_of_bounds"] == 1
+    # a duplicate chunk is shed whole, counted once
+    c = _chunk([3.0, 4.0])
+    hyg.scrub(c)
+    with pytest.warns(StreamHygieneWarning):
+        out = hyg.scrub(_chunk([3.0, 4.0]))
+    assert out.t.shape[0] == 0
+    assert hyg.stats["dropped_duplicate_chunks"] == 1
+
+
+def test_hot_pixel_guard_raise_and_drop():
+    t = np.linspace(0.0, 0.01, 30, dtype=np.float32)  # one 0.05s window
+    storm = _chunk(t, xy=np.tile([[5, 5]], (30, 1)))
+    cfg = HygieneConfig(policy="raise", hot_pixel_limit=8)
+    with pytest.raises(HotPixelError, match="events/pixel"):
+        StreamHygiene(cfg, width=W, height=H).scrub(storm)
+    # drop: the first 8 in-window events survive, the rest are shed
+    hyg = StreamHygiene(HygieneConfig(policy="drop", hot_pixel_limit=8),
+                        width=W, height=H)
+    with pytest.warns(StreamHygieneWarning, match="hot-pixel"):
+        out = hyg.scrub(storm)
+    assert out.t.shape[0] == 8
+    assert hyg.stats["dropped_hot_pixel"] == 22
+    # a quiet pixel in the same window is untouched
+    calm = hyg.scrub(_chunk(np.float32([0.02, 0.03]), xy=[[1, 1], [2, 2]]))
+    assert calm.t.shape[0] == 2
+
+
+def test_reorder_restores_sorted_order_bitwise():
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.uniform(0, 1, 256)).astype(np.float32)
+    clean = _chunk(t, xy=np.stack([rng.integers(0, W, 256),
+                                   rng.integers(0, H, 256)], 1))
+    chunks = list(iter_event_chunks(clean, 64))
+    chunks[1], chunks[2] = chunks[2], chunks[1]  # transport swap
+    hyg = StreamHygiene(HygieneConfig(policy="reorder", reorder_slack=1.0),
+                        width=W, height=H)
+    out = [hyg.scrub(c) for c in chunks]
+    out.append(hyg.flush())
+    got_t = np.concatenate([np.asarray(o.t) for o in out])
+    got_xy = np.concatenate([np.asarray(o.xy) for o in out])
+    assert np.array_equal(got_t, np.asarray(clean.t))
+    assert np.array_equal(got_xy, np.asarray(clean.xy))
+    assert hyg.stats["reorder_peak_held"] > 0
+    # every released event respects the release watermark
+    assert np.all(np.diff(got_t) >= 0)
+
+
+def test_reorder_slack_exceeded_is_typed():
+    hyg = StreamHygiene(HygieneConfig(policy="reorder", reorder_slack=0.01),
+                        width=W, height=H)
+    # releases t <= 0.99: [0.0, 0.5] are out, the watermark sits at 0.5
+    hyg.scrub(_chunk(np.float32([0.0, 0.5, 1.0])))
+    with pytest.raises(StreamOverlapError, match="reorder window exceeded"):
+        hyg.scrub(_chunk(np.float32([0.2])))  # its slot already released
+
+
+def test_empty_chunks_are_noops():
+    hyg = StreamHygiene("raise", width=W, height=H)
+    out = hyg.scrub(_chunk(np.empty(0, np.float32)))
+    assert out.t.shape[0] == 0
+    assert hyg.flush().t.shape[0] == 0
+    assert hyg.stats["events_in"] == 0
+
+
+# --- fault injection: corrupt_stream is a faithful adversary --------------
+
+
+def test_corrupt_stream_modes_are_faults(hygiene_scene, cam):
+    ev = hygiene_scene[0]
+    n = int(ev.t.shape[0])
+    for mode in EVENT_CORRUPTIONS:
+        chunks = corrupt_stream(ev, mode, EVENTS_PER_FRAME, seed=3,
+                                width=cam.width, height=cam.height, burst=16)
+        total = sum(int(c.t.shape[0]) for c in chunks)
+        cat = np.concatenate([np.asarray(c.t) for c in chunks])
+        if mode == "shuffle_events":
+            assert total == n and np.any(np.diff(cat) < 0)
+        elif mode == "swap_chunks":
+            assert total == n and np.any(np.diff(cat) < 0)
+            # stable re-sort reconstructs the clean stream exactly
+            assert np.array_equal(np.sort(cat, kind="stable"),
+                                  np.asarray(ev.t))
+        elif mode == "duplicate_chunk":
+            assert total == n + EVENTS_PER_FRAME
+        elif mode == "out_of_bounds":
+            assert total > n
+            xy = np.concatenate([np.asarray(c.xy) for c in chunks])
+            v = np.concatenate([np.asarray(c.valid) for c in chunks])
+            oob = v & ((xy[:, 0] < 0) | (xy[:, 0] > cam.width - 1))
+            assert oob.sum() == total - n
+        elif mode == "hot_pixel":
+            assert total == n + 16
+
+
+@given(mode=st.sampled_from(EVENT_CORRUPTIONS),
+       policy=st.sampled_from(("raise", "drop", "reorder")),
+       seed=st.integers(0, 63))
+@settings(max_examples=30)
+def test_hygiene_never_passes_corruption_silently(mode, policy, seed):
+    """Property: any corruption under any policy either raises a typed
+    StreamHygieneError or yields a clean (monotone, in-bounds, fully
+    accounted) stream — and reorder reconstructs pure misorderings
+    bitwise."""
+    rng = np.random.default_rng(7)
+    t = np.sort(rng.uniform(0, 1, 400)).astype(np.float32)
+    clean = _chunk(t, xy=np.stack([rng.integers(0, W, 400),
+                                   rng.integers(0, H, 400)], 1))
+    chunks = corrupt_stream(clean, mode, 64, seed=seed,
+                            width=W, height=H, burst=40)
+    hyg = StreamHygiene(
+        HygieneConfig(policy=policy, reorder_slack=0.8, hot_pixel_limit=12),
+        width=W, height=H)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", StreamHygieneWarning)
+            got = _scrub_all(hyg, chunks)
+    except StreamHygieneError:
+        assert policy in ("raise", "reorder")  # drop never raises
+        return
+    assert np.all(np.diff(got) >= 0), "released events must be sorted"
+    s = hyg.stats
+    dropped = (s["dropped_out_of_order"] + s["dropped_duplicate_events"]
+               + s["dropped_out_of_bounds"] + s["dropped_hot_pixel"])
+    assert s["events_in"] == got.shape[0] + dropped, "every event accounted"
+    if policy == "reorder" and mode in ("shuffle_events", "swap_chunks"):
+        assert np.array_equal(got, t), "reorder must reconstruct bitwise"
+
+
+# --- engine level: corruption grid x policy x sweep backend ---------------
+
+# expected engine response: an error type (typed rejection), "bitwise"
+# (results equal the clean stream's), or "survives" (flush completes,
+# offenders shed)
+ENGINE_EXPECT = {
+    "shuffle_events": {"raise": NonMonotoneEventError, "drop": "survives",
+                       "reorder": "bitwise"},
+    "swap_chunks": {"raise": StreamOverlapError, "drop": "survives",
+                    "reorder": "bitwise"},
+    "duplicate_chunk": {"raise": DuplicateChunkError, "drop": "bitwise",
+                        "reorder": DuplicateChunkError},
+    "out_of_bounds": {"raise": OutOfBoundsEventError, "drop": "bitwise",
+                      "reorder": OutOfBoundsEventError},
+    "hot_pixel": {"raise": HotPixelError, "drop": "survives",
+                  "reorder": HotPixelError},
+}
+
+
+@pytest.mark.parametrize("mode", EVENT_CORRUPTIONS)
+@pytest.mark.parametrize("sweep", ("batched", "sharded"))
+def test_engine_corrupt_grid(cam, hygiene_scene, mode, sweep):
+    ev, traj, dsi_cfg, opts, ref = hygiene_scene
+    chunks = corrupt_stream(ev, mode, EVENTS_PER_FRAME, seed=3,
+                            width=cam.width, height=cam.height, burst=96)
+    spans = [float(np.asarray(c.t).max() - np.asarray(c.t).min())
+             for c in chunks if c.t.shape[0]]
+    slack = 2.0 * max(spans)
+    for policy, want in ENGINE_EXPECT[mode].items():
+        hyg = HygieneConfig(policy=policy, reorder_slack=slack,
+                            hot_pixel_limit=24)
+        engine = EMVSStreamEngine(
+            cam, dsi_cfg, traj, opts,
+            StreamConfig(events_per_frame=EVENTS_PER_FRAME, sweep=sweep,
+                         hygiene=hyg))
+
+        def drive():
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", StreamHygieneWarning)
+                for c in chunks:
+                    engine.push(c)
+                return engine.flush()
+
+        if want == "bitwise":
+            _assert_results_match(drive(), ref, exact_dsi=True)
+        elif want == "survives":
+            res = drive()
+            assert len(res.segments) >= 1
+            h = engine.stats["hygiene"]
+            assert (h["dropped_out_of_order"] + h["dropped_duplicate_chunks"]
+                    + h["dropped_out_of_bounds"] + h["dropped_hot_pixel"]) > 0
+        else:
+            with pytest.raises(want):
+                drive()
+
+
+def test_engine_hygiene_off_is_transparent(cam, hygiene_scene):
+    """hygiene="off" must not alter the clean path (bitwise) nor touch
+    the corruption — the pre-hardening behavior, kept for benchmarks."""
+    ev, traj, dsi_cfg, opts, ref = hygiene_scene
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, traj, opts,
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME, hygiene="off"))
+    for c in iter_event_chunks(ev, EVENTS_PER_FRAME):
+        engine.push(c)
+    _assert_results_match(engine.flush(), ref, exact_dsi=True)
+    h = engine.stats["hygiene"]
+    # pure pass-through: every event counted in and out, nothing judged
+    assert h["events_in"] == h["events_out"] == int(ev.t.shape[0])
+    assert h["dropped_out_of_order"] == h["dropped_out_of_bounds"] == 0
+
+
+# --- memory budget: admission policies ------------------------------------
+
+
+def _budget_for(ref, frames0) -> tuple[int, int]:
+    """(feasible budget, per-frame bytes): the largest segment's working
+    set plus the one frame whose arrival closes it — the documented
+    feasibility floor: tight enough that admissions beyond a closed
+    segment must wait for it to be dispatched, harvested, and evicted."""
+    fb = _FrameStore._frame_bytes(*[np.asarray(a) for a in frames0])
+    max_seg = max(hi - lo for (lo, hi) in
+                  (s.frame_range for s in ref.segments))
+    return (max_seg + 1) * fb, fb
+
+
+def _frames0(cam, ev, traj):
+    f = aggregate(cam, ev, traj, events_per_frame=EVENTS_PER_FRAME)
+    return (f.xy[0], f.valid[0], f.t_mid[0], f.poses.R[0], f.poses.t[0])
+
+
+def test_budget_stall_is_bitwise_and_bounded(cam, hygiene_scene):
+    ev, traj, dsi_cfg, opts, ref = hygiene_scene
+    budget, _ = _budget_for(ref, _frames0(cam, ev, traj))
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, traj, opts,
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                     frame_store_budget_bytes=budget, budget_policy="stall"))
+    # one burst push: every frame is admitted in a single drain, so the
+    # over-budget admissions MUST go through make_room (deterministic
+    # stalls, no chance for an interleaved harvest to slim the store)
+    engine.push(ev)
+    assert engine.stats["frame_store_bytes"] <= budget
+    res = engine.flush()
+    _assert_results_match(res, ref, exact_dsi=True)
+    assert engine.stats["frame_store_peak_bytes"] <= budget
+    assert engine.stats["budget_stalls"] >= 1, "budget must have bitten"
+    assert engine.stats["backlog_frames"] == 0
+
+
+def test_budget_reject_raises_then_recovers(cam, hygiene_scene):
+    """Policy "reject": over-budget pushes raise MemoryBudgetError with
+    the frames retained in the backlog; poll() retries admission and
+    flush() drains — the result stays bitwise-equal to offline."""
+    ev, traj, dsi_cfg, opts, ref = hygiene_scene
+    budget, _ = _budget_for(ref, _frames0(cam, ev, traj))
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, traj, opts,
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                     frame_store_budget_bytes=budget, budget_policy="reject"))
+    rejects = 0
+    for c in iter_event_chunks(ev, EVENTS_PER_FRAME):
+        for attempt in range(200):
+            try:
+                if attempt == 0:
+                    engine.push(c)
+                else:
+                    engine.poll()  # documented recovery: retry admission
+                break
+            except MemoryBudgetError as e:
+                rejects += 1
+                assert "reject" in str(e) and str(budget) in str(e)
+                assert engine.stats["backlog_frames"] >= 1  # nothing lost
+        assert engine.stats["frame_store_bytes"] <= budget
+    res = engine.flush()
+    _assert_results_match(res, ref, exact_dsi=True)
+    assert engine.stats["frame_store_peak_bytes"] <= budget
+    assert engine.stats["budget_rejects"] == rejects
+
+
+def test_infeasible_budget_is_fatal_not_deadlock(cam, hygiene_scene):
+    """A budget below the largest segment's working set cannot be honored
+    without diverging from offline; both policies must say so, typed."""
+    ev, traj, dsi_cfg, opts, ref = hygiene_scene
+    _, fb = _budget_for(ref, _frames0(cam, ev, traj))
+    for policy, match in (("stall", "working set"), ("reject", "reject")):
+        engine = EMVSStreamEngine(
+            cam, dsi_cfg, traj, opts,
+            StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                         frame_store_budget_bytes=3 * fb,
+                         budget_policy=policy))
+        with pytest.raises(MemoryBudgetError, match=match):
+            for c in iter_event_chunks(ev, EVENTS_PER_FRAME):
+                engine.push(c)
+            engine.flush()
+
+
+@given(extra_frames=st.integers(0, 6),
+       policy=st.sampled_from(("stall", "reject")),
+       chunk=st.sampled_from((EVENTS_PER_FRAME, 997, 10_000)))
+@settings(max_examples=10)
+def test_budget_never_exceeded_property(cam, hygiene_scene, extra_frames,
+                                        policy, chunk):
+    """Property: for any feasible budget, admission policy, and chunking,
+    frame_store_bytes never exceeds the budget at any observation point,
+    and the flushed result is bitwise-equal to offline."""
+    ev, traj, dsi_cfg, opts, ref = hygiene_scene
+    floor, fb = _budget_for(ref, _frames0(cam, ev, traj))
+    budget = floor + extra_frames * fb
+    engine = EMVSStreamEngine(
+        cam, dsi_cfg, traj, opts,
+        StreamConfig(events_per_frame=EVENTS_PER_FRAME,
+                     frame_store_budget_bytes=budget, budget_policy=policy))
+    for c in iter_event_chunks(ev, chunk):
+        try:
+            engine.push(c)
+        except MemoryBudgetError:
+            assert policy == "reject"  # frames retained; flush will drain
+        assert engine.stats["frame_store_bytes"] <= budget
+    res = engine.flush()
+    assert engine.stats["frame_store_peak_bytes"] <= budget
+    _assert_results_match(res, ref, exact_dsi=True)
+
+
+def test_stream_config_validates_new_fields():
+    with pytest.raises(ValueError, match="hygiene"):
+        StreamConfig(hygiene="shrug")
+    with pytest.raises(ValueError, match="budget"):
+        StreamConfig(frame_store_budget_bytes=0)
+    with pytest.raises(ValueError, match="budget_policy"):
+        StreamConfig(frame_store_budget_bytes=1 << 20,
+                     budget_policy="hope")
