@@ -1,0 +1,41 @@
+"""Static analysis for the sweep datapaths.
+
+A jaxpr-interpreting linter that traces every sweep program (formulation
+x backend x interpolation x quantization) *without executing it* and
+enforces the quantization contracts of Table 1:
+
+- ``dtype_flow``: abstract interpretation over jaxprs — worst-case value
+  intervals, fractional-value tracking and clamp provenance — proving
+  the int32 accumulator / int16 saturating store cannot silently wrap,
+  and flagging float->int casts that discard fractional bilinear votes
+  (the PR 3 bug class), f64 promotions and weak_type leaks.
+- ``rules``: the typed, suppressible rule set (dtype-flow/overflow,
+  host-sync detection, recompilation audit).
+- ``lint``: the ``python -m repro.analysis.lint`` CLI and the program
+  grid it checks, gated against a checked-in baseline.
+
+See docs/quantization_contracts.md for the contract table and how to
+suppress a finding.
+"""
+from repro.analysis.findings import Finding, Provenance, load_baseline, write_baseline
+from repro.analysis.dtype_flow import AbsVal, DtypeFlowAnalyzer, analyze_program
+from repro.analysis.rules import (
+    DtypeFlowRule,
+    HostSyncRule,
+    audit_variant_space,
+    default_rules,
+)
+
+__all__ = [
+    "AbsVal",
+    "DtypeFlowAnalyzer",
+    "DtypeFlowRule",
+    "Finding",
+    "HostSyncRule",
+    "Provenance",
+    "analyze_program",
+    "audit_variant_space",
+    "default_rules",
+    "load_baseline",
+    "write_baseline",
+]

@@ -1,0 +1,281 @@
+"""`python -m repro.analysis.lint` — the quantization-contract linter CLI.
+
+Traces every sweep program in the formulation x backend x interpolation
+x quantization grid (plus the kernel-level entry points) on tiny
+`ShapeDtypeStruct` shapes, runs the dtype-flow and host-sync rules over
+each jaxpr, audits the streaming dispatcher's compiled-variant space,
+and reports findings against the checked-in baseline
+(`analysis_baseline.json` at the repo root).
+
+Exit status is 0 iff no *new* (non-suppressed) findings; suppressed
+findings are listed but do not fail the lint. `--write-baseline`
+regenerates the baseline from the current findings (the suppression
+workflow — see docs/quantization_contracts.md). `--json` dumps the full
+findings, summaries and overflow proofs for the CI artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Sequence
+
+import jax
+
+from repro.analysis.dtype_flow import AbsVal, absval_from_aval, analyze_program
+from repro.analysis.findings import Finding, load_baseline, split_by_baseline, write_baseline
+from repro.analysis.rules import audit_variant_space, default_rules
+
+FORMULATIONS = ("scatter", "matmul", "kernel")
+BACKENDS = ("batched", "sharded")
+VOTINGS = ("nearest", "bilinear")
+QUANTIZED = (False, True)
+
+# tiny trace shapes: static analysis cost is per-program, not per-element.
+# The proof target is the paper-scale worst case the int32 accumulator
+# must survive — a full segment capacity of frames with every event
+# landing in one voxel — so the frame capacity is traced at the real
+# streaming bound (the scan closed form makes the length free).
+TRACE_W, TRACE_H, TRACE_NZ = 32, 24, 8
+PROOF_CAPACITY_FRAMES = 64
+TRACE_SEGMENTS, TRACE_CAPACITY, TRACE_EVENTS = 2, PROOF_CAPACITY_FRAMES, 64
+
+
+def _absvals_from_contracts(
+    leaves: Sequence[Any], bounds: Sequence[tuple[float, float, bool]]
+) -> list[AbsVal]:
+    from jax._src import core as jcore
+
+    out = []
+    for leaf, (lo, hi, integral) in zip(leaves, bounds):
+        base = absval_from_aval(jcore.ShapedArray(leaf.shape, leaf.dtype))
+        out.append(base.with_(lo=float(lo), hi=float(hi), integral=bool(integral), known=True))
+    return out
+
+
+def build_entries(grid: str = "full") -> list[dict[str, Any]]:
+    """The lint grid: one dict per traced program.
+
+    Each entry carries `fn`, `args` (ShapeDtypeStructs), `contracts`
+    (flattened input AbsVals) and the policy's sanctioned clamp bounds.
+    """
+    from repro.core.camera import CameraModel
+    from repro.core.dsi import DSIConfig
+    from repro.core.pipeline import EMVSOptions, SegmentBatch, sweep_trace_spec
+    from repro.kernels.backproject_vote import ops as bpv_ops
+
+    cam = CameraModel(width=TRACE_W, height=TRACE_H, cx=TRACE_W / 2 - 0.5,
+                      cy=TRACE_H / 2 - 0.5)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=TRACE_NZ)
+
+    entries: list[dict[str, Any]] = []
+    formulations = FORMULATIONS if grid == "full" else ("matmul",)
+    backends = BACKENDS if grid == "full" else ("batched",)
+    for formulation in formulations:
+        for backend in backends:
+            for voting in VOTINGS:
+                for quantized in QUANTIZED:
+                    opts = EMVSOptions(
+                        voting=voting, formulation=formulation, quantized=quantized
+                    )
+                    name = (
+                        f"sweep[{formulation},{backend},{voting},"
+                        f"{'quant' if quantized else 'float'}]"
+                    )
+                    fn, args, contracts = sweep_trace_spec(
+                        cam,
+                        dsi_cfg,
+                        opts,
+                        segments=TRACE_SEGMENTS,
+                        capacity=TRACE_CAPACITY,
+                        events=TRACE_EVENTS,
+                        sweep=backend,
+                    )
+                    leaves = jax.tree_util.tree_leaves(args)
+                    bounds = [tuple(contracts[f]) for f in SegmentBatch._fields]
+                    entries.append(
+                        {
+                            "name": name,
+                            "fn": fn,
+                            "args": args,
+                            "contracts": _absvals_from_contracts(leaves, bounds),
+                            "policy": opts.policy,
+                        }
+                    )
+    if grid == "full":
+        # kernel-level entries exercise the ops.py datapath (and the
+        # pallas_call body) outside the full segment sweep
+        for voting in VOTINGS:
+            for quantized in QUANTIZED:
+                fn, args, contracts = bpv_ops.kernel_trace_spec(
+                    cam=cam,
+                    dsi_cfg=dsi_cfg,
+                    frames=TRACE_CAPACITY,
+                    events=TRACE_EVENTS,
+                    mode=voting,
+                    quantized=quantized,
+                )
+                from repro.quant.policies import TABLE1
+
+                entries.append(
+                    {
+                        "name": f"kernel[{voting},{'quant' if quantized else 'float'}]",
+                        "fn": fn,
+                        "args": args,
+                        "contracts": _absvals_from_contracts(
+                            jax.tree_util.tree_leaves(args), list(contracts.values())
+                        ),
+                        "policy": TABLE1,
+                    }
+                )
+    return entries
+
+
+def lint_entry(entry: dict[str, Any]) -> tuple[list[Finding], dict[str, Any]]:
+    ctx = analyze_program(
+        entry["fn"],
+        entry["args"],
+        entry["contracts"],
+        entry=entry["name"],
+        rules=default_rules(),
+        sanctioned_clips=entry["policy"].sanctioned_clip_bounds(),
+    )
+    return ctx.findings, dict(ctx.facts)
+
+
+def lint_variant_space() -> tuple[list[Finding], dict[str, Any]]:
+    """The recompilation audit across the supported StreamConfigs."""
+    from repro.serving.emvs_stream import StreamConfig
+
+    findings: list[Finding] = []
+    summaries: dict[str, Any] = {}
+    for name, cfg, mesh_segments in (
+        ("variant-space[batched]", StreamConfig(), 1),
+        ("variant-space[sharded,x8]", StreamConfig(sweep="sharded"), 8),
+    ):
+        fs, summary = audit_variant_space(
+            cfg, PROOF_CAPACITY_FRAMES, mesh_segments=mesh_segments, entry=name
+        )
+        findings.extend(fs)
+        summaries[name] = summary
+    return findings, summaries
+
+
+def _dedupe(findings: list[Finding]) -> list[Finding]:
+    seen: set[tuple[str, str, str]] = set()
+    out = []
+    for f in findings:
+        key = (f.fingerprint, f.provenance.source, f.message)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(f)
+    return out
+
+
+def run_lint(grid: str = "full") -> tuple[list[Finding], dict[str, Any]]:
+    """Run every rule over every entry; returns (findings, report)."""
+    findings: list[Finding] = []
+    int_bounds: dict[str, tuple[float, float]] = {}
+    entries_run: list[str] = []
+    for entry in build_entries(grid):
+        fs, facts = lint_entry(entry)
+        findings.extend(fs)
+        entries_run.append(entry["name"])
+        for dtype, (lo, hi) in facts.get("int_bounds", {}).items():
+            plo, phi = int_bounds.get(dtype, (0.0, 0.0))
+            int_bounds[dtype] = (min(plo, lo), max(phi, hi))
+    vfindings, vsummaries = lint_variant_space()
+    findings.extend(vfindings)
+    import numpy as np
+
+    proofs = {}
+    for dtype, (lo, hi) in sorted(int_bounds.items()):
+        info = np.iinfo(np.dtype(dtype))
+        proofs[dtype] = {
+            "worst_case_lo": lo,
+            "worst_case_hi": hi,
+            "dtype_min": float(info.min),
+            "dtype_max": float(info.max),
+            "headroom": min(lo - float(info.min), float(info.max) - hi),
+        }
+    report = {
+        "entries": entries_run,
+        "int_bound_proofs": proofs,
+        "variant_space": vsummaries,
+    }
+    return _dedupe(findings), report
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="quantization-contract linter over the sweep program grid",
+    )
+    ap.add_argument("--baseline", default=None, help="suppression baseline JSON")
+    ap.add_argument("--json", dest="json_out", default=None, help="findings JSON artifact path")
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="regenerate the baseline from current findings and exit 0",
+    )
+    ap.add_argument(
+        "--grid",
+        choices=("full", "quick"),
+        default="full",
+        help="'quick' lints only the matmul/batched column (fast smoke)",
+    )
+    args = ap.parse_args(argv)
+
+    findings, report = run_lint(args.grid)
+
+    if args.write_baseline:
+        path = args.baseline or "analysis_baseline.json"
+        write_baseline(path, findings)
+        print(f"wrote {len(findings)} fingerprint(s) to {path}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else set()
+    new, suppressed = split_by_baseline(findings, baseline)
+
+    for f in suppressed:
+        print(f"SUPPRESSED {f.render()}")
+    for f in new:
+        print(f"NEW {f.render()}")
+
+    for dtype, proof in report["int_bound_proofs"].items():
+        print(
+            f"proof: worst-case {dtype} values in "
+            f"[{proof['worst_case_lo']:.0f}, {proof['worst_case_hi']:.0f}] within "
+            f"[{proof['dtype_min']:.0f}, {proof['dtype_max']:.0f}] "
+            f"(headroom {proof['headroom']:.0f})"
+        )
+    for name, summary in report["variant_space"].items():
+        print(
+            f"{name}: {summary['variants']} compiled variants "
+            f"(S buckets {summary['s_buckets']} x capacities {summary['capacities']}, "
+            f"bound {summary['bound']})"
+        )
+    print(
+        f"{len(report['entries'])} program(s) linted: "
+        f"{len(new)} new finding(s), {len(suppressed)} suppressed"
+    )
+
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(
+                {
+                    "new": [f.to_json() for f in new],
+                    "suppressed": [f.to_json() for f in suppressed],
+                    "report": report,
+                },
+                fh,
+                indent=2,
+            )
+            fh.write("\n")
+
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

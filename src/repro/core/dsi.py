@@ -78,3 +78,18 @@ def saturation_fraction(dsi: Array) -> Array:
     """Fraction of voxels that would clip at int16 — paper's 16b adequacy claim."""
     info = jnp.iinfo(DSI_STORE_DTYPE)
     return jnp.mean((dsi > info.max) | (dsi < info.min))
+
+
+def store_saturation_fraction(dsi: Array) -> Array:
+    """Fraction of voxels sitting AT the int16 store limits (inclusive).
+
+    `saturation_fraction` asks the pre-store question ("would this
+    accumulator clip?") and is identically zero on anything that already
+    went through `storage_roundtrip`. Live streams only ever see stored
+    volumes, so the streaming monitor uses this boundary-inclusive form:
+    a voxel at exactly ±int16 max either clipped or is about to, and
+    either way the paper's "16 bits never saturate" claim is at risk.
+    Elementwise, so batched (S, Nz, h, w) sweeps work unchanged.
+    """
+    info = jnp.iinfo(DSI_STORE_DTYPE)
+    return jnp.mean((dsi >= info.max) | (dsi <= info.min))

@@ -794,6 +794,86 @@ def run_emvs(
                       clouds=[c for _, c in ordered])
 
 
+# ---------------------------------------------------------------------------
+# Static-analysis entry points (repro.analysis)
+# ---------------------------------------------------------------------------
+
+
+class TensorContract(NamedTuple):
+    """Worst-case input bounds the static analyzer may assume.
+
+    `integral=True` asserts the tensor only holds integer *values*
+    (whatever its storage dtype) — e.g. the 0/1 validity masks. These are
+    semantic promises about what callers feed the sweep, not dtype facts;
+    the linter's overflow proofs are conditional on them.
+    """
+
+    lo: float
+    hi: float
+    integral: bool = False
+
+
+# per-field contracts for SegmentBatch inputs to the sweep programs:
+# masks are exact 0/1, rotations are orthonormal (entries in [-1, 1]),
+# coords/translations are bounded by any physically plausible rig
+SWEEP_INPUT_CONTRACTS: dict[str, TensorContract] = {
+    "xy": TensorContract(-4096.0, 4096.0),
+    "valid": TensorContract(0.0, 1.0, integral=True),
+    "frame_valid": TensorContract(0.0, 1.0, integral=True),
+    "poses_R": TensorContract(-1.0, 1.0),
+    "poses_t": TensorContract(-1e3, 1e3),
+    "ref_R": TensorContract(-1.0, 1.0),
+    "ref_t": TensorContract(-1e3, 1e3),
+}
+
+
+def sweep_trace_spec(
+    cam: CameraModel,
+    dsi_cfg: DSIConfig,
+    opts: EMVSOptions,
+    *,
+    segments: int = 2,
+    capacity: int = SEGMENT_BUCKET_MIN,
+    events: int = 64,
+    sweep: str = "batched",
+    mesh=None,
+):
+    """Traceable sweep entry for `repro.analysis`: `(fn, args, contracts)`.
+
+    `fn(*args)` stages the exact program the `sweep=` backend dispatches
+    — `sweep_segment_batch` for "batched", `process_segments_sharded`
+    (jit(shard_map(...))) for "sharded" — on `ShapeDtypeStruct` inputs,
+    so `jax.make_jaxpr` can lint it without running anything. `contracts`
+    maps `SegmentBatch` field names to `TensorContract`s seeding the
+    analyzer's worst-case intervals.
+    """
+    s, c, e = segments, capacity, events
+    f32 = jnp.float32
+    batch = SegmentBatch(
+        xy=jax.ShapeDtypeStruct((s, c, e, 2), f32),
+        valid=jax.ShapeDtypeStruct((s, c, e), f32),
+        frame_valid=jax.ShapeDtypeStruct((s, c), f32),
+        poses_R=jax.ShapeDtypeStruct((s, c, 3, 3), f32),
+        poses_t=jax.ShapeDtypeStruct((s, c, 3), f32),
+        ref_R=jax.ShapeDtypeStruct((s, 3, 3), f32),
+        ref_t=jax.ShapeDtypeStruct((s, 3), f32),
+    )
+    if sweep == "sharded":
+        from repro.distributed.emvs import process_segments_sharded
+
+        def fn(b: SegmentBatch):
+            return process_segments_sharded(cam, dsi_cfg, b, opts, mesh=mesh)
+
+    elif sweep == "batched":
+
+        def fn(b: SegmentBatch):
+            return sweep_segment_batch(cam, dsi_cfg, b, opts)
+
+    else:
+        raise ValueError(f"unknown sweep backend {sweep!r}")
+    return fn, (batch,), dict(SWEEP_INPUT_CONTRACTS)
+
+
 def run_emvs_looped(
     cam: CameraModel,
     dsi_cfg: DSIConfig,

@@ -26,6 +26,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.quant.fixed_point import round_half_away
+
 Array = jax.Array
 
 
@@ -152,5 +154,8 @@ def vote_onehot_matmul(
         ox = ox * weights[..., None]
     votes = jnp.einsum("zeh,zew->zhw", oy, ox)  # MXU contraction over events
     if dsi.dtype in (jnp.int16, jnp.int32):
-        votes = jnp.round(votes).astype(dsi.dtype)
+        # RTL rounding convention: half away from zero, matching the
+        # fixed-point quantizers — jnp.round would be half-to-even and
+        # disagree with quant/fixed_point at exact half-integer votes
+        votes = round_half_away(votes).astype(dsi.dtype)
     return dsi + votes

@@ -95,3 +95,54 @@ def backproject_vote_frames(
         mode=mode, block_z=block_z, frames_per_step=frames_per_step,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis entry point (repro.analysis)
+# ---------------------------------------------------------------------------
+
+# worst-case input bounds the linter may assume for the kernel datapath —
+# same semantic contracts as `pipeline.SWEEP_INPUT_CONTRACTS` but over the
+# kernel's own (xy, valid, H, phi, frame_valid) signature
+KERNEL_INPUT_CONTRACTS = {
+    "xy": (-4096.0, 4096.0, False),
+    "valid": (0.0, 1.0, True),
+    "H": (-1e4, 1e4, False),
+    "phi": (-1e4, 1e4, False),
+    "frame_valid": (0.0, 1.0, True),
+}
+
+
+def kernel_trace_spec(
+    *,
+    cam: CameraModel,
+    dsi_cfg: DSIConfig,
+    frames: int = 4,
+    events: int = 64,
+    mode: str = "nearest",
+    quantized: bool = False,
+):
+    """Traceable kernel entry for `repro.analysis`: `(fn, args, contracts)`.
+
+    Stages `backproject_vote_frames` — including the Pallas kernel body —
+    on `ShapeDtypeStruct` inputs so `jax.make_jaxpr` can walk it without
+    executing. The interpreter recurses into the `pallas_call` equation
+    and checks the same float->int contracts inside the kernel.
+    """
+    f, e, nz = frames, events, dsi_cfg.num_planes
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((f, e, 2), f32),  # xy
+        jax.ShapeDtypeStruct((f, e), f32),  # valid
+        jax.ShapeDtypeStruct((f, 3, 3), f32),  # H
+        jax.ShapeDtypeStruct((f, nz, 3), f32),  # phi
+        jax.ShapeDtypeStruct((f,), f32),  # frame_valid
+    )
+
+    def fn(xy, valid, H, phi, frame_valid):
+        return backproject_vote_frames(
+            xy, valid, H, phi, cam=cam, dsi_cfg=dsi_cfg, mode=mode,
+            quantized=quantized, frame_valid=frame_valid,
+        )
+
+    return fn, args, dict(KERNEL_INPUT_CONTRACTS)

@@ -57,9 +57,20 @@ INT8 = FixedPointFormat(8, 0, signed=False)  # plane coords (pixel index 0..255)
 INT16 = FixedPointFormat(16, 0)  # DSI scores
 
 
-def _round_half_away(x: Array) -> Array:
-    """RTL-style rounding: round half away from zero (jnp.round is half-even)."""
+def round_half_away(x: Array) -> Array:
+    """RTL-style rounding: round half away from zero (jnp.round is half-even).
+
+    The single rounding convention of every quantizing datapath: the
+    fixed-point quantizers here and the integer vote store in
+    `core/voting.py` must agree, or the quantized matmul/scatter
+    formulations drift from the RTL semantics at exact half-integer
+    values (see tests/test_voting.py's half-integer regression).
+    """
     return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+# original private name, kept for in-repo callers
+_round_half_away = round_half_away
 
 
 def quantize(x: Array, fmt: FixedPointFormat) -> Array:

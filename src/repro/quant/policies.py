@@ -66,6 +66,39 @@ class EMVSQuantPolicy:
 
         return q(x_i), q(y_i)
 
+    # -- contract declarations for repro.analysis ------------------------
+
+    def declared_formats(self) -> dict[str, FixedPointFormat]:
+        """Per-tensor expected fixed-point formats, by datapath name.
+
+        This is the machine-readable form of Table 1 that the
+        quantization-contract linter checks against (see
+        docs/quantization_contracts.md). The 'dsi' entry doubles as the
+        int16 saturating-store contract of `core/dsi.py:to_storage`.
+        """
+        return {
+            "coords": self.coords,
+            "canonical": self.canonical,
+            "plane_coords": self.plane_coords,
+            "homography": self.homography,
+            "phi": self.phi,
+            "dsi": self.dsi,
+        }
+
+    def sanctioned_clip_bounds(self) -> frozenset[tuple[float, float]]:
+        """Clamp ranges that sanction a float->int cast.
+
+        The linter treats a float->int conversion as a deliberate
+        saturating store — not a fractional-truncation bug — exactly when
+        its operand was clamped to one of these (q_min, q_max) ranges,
+        i.e. to a format this policy declares. Anything else is the PR 3
+        bug class and gets flagged.
+        """
+        return frozenset(
+            (float(fmt.q_min), float(fmt.q_max))
+            for fmt in self.declared_formats().values()
+        )
+
 
 TABLE1 = EMVSQuantPolicy()
 

@@ -206,13 +206,19 @@ class StreamSession:
         # session) back here. Same identities as the single-stream engine.
         # "hygiene" aliases the guard's live stats dict; "budget_stalls" /
         # "budget_rejects" / "backlog_frames" track the admission policy.
+        # "dsi_saturation_peak" is the largest per-segment fraction of DSI
+        # voxels at the int16 store limits seen on this stream (inclusive
+        # boundary — see core.dsi.store_saturation_fraction): the live
+        # monitor for the paper's "16 bits never saturate" claim. Updated
+        # by the dispatcher on harvest; stays 0.0 on healthy streams.
         self.stats = {"chunks": 0, "empty_chunks": 0, "frames": 0,
                       "segments": 0, "pose_chunks": 0, "stalled_frames": 0,
                       "max_stalled": 0,
                       "pose_watermark": self.aggregator.pose_watermark,
                       "frame_store_bytes": 0, "frame_store_peak_bytes": 0,
                       "budget_stalls": 0, "budget_rejects": 0,
-                      "backlog_frames": 0, "hygiene": self.hygiene.stats}
+                      "backlog_frames": 0, "dsi_saturation_peak": 0.0,
+                      "hygiene": self.hygiene.stats}
         dispatcher.register(self)
 
     # --- ingest -----------------------------------------------------------

@@ -28,6 +28,7 @@ from typing import NamedTuple
 
 import jax
 
+from repro.core import dsi as dsi_lib
 from repro.core.camera import CameraModel
 from repro.core.detection import DepthMap
 from repro.core.dsi import DSIConfig
@@ -42,6 +43,37 @@ from repro.core.pipeline import (
 from repro.core.pointcloud import PointCloud, depth_maps_to_points
 
 Array = jax.Array
+
+
+def enumerate_variant_space(stream_cfg, max_segment_frames: int, *,
+                            mesh_segments: int = 1) -> dict:
+    """Statically enumerate the dispatcher's compiled-variant space.
+
+    Every sweep the dispatcher can stage has its entry shapes determined
+    by exactly two numbers: the padded S bucket and the frame capacity.
+    This reproduces the dispatcher's own bucket arithmetic (shard
+    rounding for the sharded backend, `bucket_capacity` padding) as a
+    pure function of config, so `repro.analysis`'s recompilation audit
+    can verify the |S buckets| x |capacities| jit-cache bound without
+    constructing an engine. Returns `{"s_buckets", "capacities",
+    "variants"}` with `variants` the full (s_bucket, capacity) product.
+    """
+    from repro.core.pipeline import bucket_capacity
+
+    if max_segment_frames <= 0:
+        raise ValueError("max_segment_frames must be positive")
+    if stream_cfg.sweep == "sharded":
+        n = max(1, int(mesh_segments))
+        # must mirror SweepDispatcher.__init__'s shard rounding exactly
+        s_buckets = tuple(sorted({-(-b // n) * n
+                                  for b in stream_cfg.segment_buckets}))
+    else:
+        s_buckets = tuple(stream_cfg.segment_buckets)
+    capacities = tuple(sorted({bucket_capacity(f)
+                               for f in range(1, max_segment_frames + 1)}))
+    variants = tuple((s, c) for s in s_buckets for c in capacities)
+    return {"s_buckets": s_buckets, "capacities": capacities,
+            "variants": variants}
 
 
 class _InFlight(NamedTuple):
@@ -311,6 +343,18 @@ class SweepDispatcher:
                 return b
         raise AssertionError(f"group of {n} exceeds top segment bucket")
 
+    def variant_space(self, max_segment_frames: int) -> dict:
+        """The live dispatcher's compiled-variant space (see
+        `enumerate_variant_space`), using the actual mesh segment-axis
+        size when the sharded backend is active."""
+        if self.mesh is not None:
+            from repro.distributed.emvs import segment_axis_size
+            mesh_segments = segment_axis_size(self.mesh)
+        else:
+            mesh_segments = 1
+        return enumerate_variant_space(self.stream_cfg, max_segment_frames,
+                                       mesh_segments=mesh_segments)
+
     def _sweep(self, batch) -> tuple[Array, DepthMap]:
         if self.stream_cfg.sweep == "sharded":
             from repro.distributed.emvs import process_segments_sharded
@@ -372,6 +416,14 @@ class SweepDispatcher:
         if owners is None:
             owners = (self.default_owner,) * len(inf.segs)
         for k, ((start, end), sess) in enumerate(zip(inf.segs, owners)):
+            # per-segment fraction of DSI voxels at the int16 store limits,
+            # feeding the owning session's "dsi_saturation_peak" monitor
+            # (the live check of the paper's "16 bits never saturate"
+            # claim). Computed on results that are already device-complete,
+            # so this adds one tiny reduction, not a per-chunk round-trip.
+            sat = float(dsi_lib.store_saturation_fraction(inf.dsis[k]))
+            sess.stats["dsi_saturation_peak"] = max(
+                sess.stats.get("dsi_saturation_peak", 0.0), sat)
             dm = DepthMap(inf.dms.depth[k], inf.dms.mask[k],
                           inf.dms.confidence[k])
             res = SegmentResult(dm, inf.dsis[k],

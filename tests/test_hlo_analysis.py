@@ -95,3 +95,60 @@ def test_multiplicities_entry_is_one():
     mult = multiplicities(comps)
     entry = [n for n, c_ in comps.items() if c_.is_entry]
     assert mult[entry[0]] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Quantization-contract cross-check: the lowered sweep's stored-DSI bytes
+# must match what the quant policy declares (docs/quantization_contracts.md)
+# ---------------------------------------------------------------------------
+
+
+def _stored_dsi_bytes_of_lowered_sweep(sweep: str) -> tuple[int, int]:
+    """Lower the sweep with the int16 store as the program root (so XLA
+    cannot fold the narrow tensor away) and return (hlo_bytes, predicted)."""
+    from repro.core.camera import CameraModel
+    from repro.core.dsi import DSIConfig
+    from repro.core import dsi as dsi_lib
+    from repro.core.pipeline import EMVSOptions, sweep_trace_spec
+    from repro.quant.policies import TABLE1
+
+    cam = CameraModel(width=32, height=24, cx=15.5, cy=11.5)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8)
+    opts = EMVSOptions(voting="nearest", formulation="matmul", quantized=True)
+    segments, capacity, events = 2, 4, 16
+    fn, args, _ = sweep_trace_spec(
+        cam, dsi_cfg, opts, segments=segments, capacity=capacity,
+        events=events, sweep=sweep,
+    )
+    g = jax.jit(lambda b: dsi_lib.to_storage(fn(b)[0]))
+    c = g.lower(*args).compile()
+    comps = parse_module(c.as_text())
+    entry = next(c_ for c_ in comps.values() if c_.is_entry)
+
+    dsi_shape = (segments, *dsi_cfg.shape)
+    hlo_bytes = 0
+    for shapes in entry.symbols.values():
+        for dtype, dims in shapes:
+            if dtype == "s16" and dims == dsi_shape:
+                n = 1
+                for d in dims:
+                    n *= d
+                hlo_bytes = max(hlo_bytes, n * 2)
+
+    fmt = TABLE1.declared_formats()["dsi"]
+    assert fmt.total_bits % 8 == 0 and fmt.signed
+    n = 1
+    for d in dsi_shape:
+        n *= d
+    predicted = n * (fmt.total_bits // 8)
+    return hlo_bytes, predicted
+
+
+def test_batched_sweep_stored_dsi_bytes_match_quant_policy():
+    hlo_bytes, predicted = _stored_dsi_bytes_of_lowered_sweep("batched")
+    assert hlo_bytes == predicted != 0
+
+
+def test_sharded_sweep_stored_dsi_bytes_match_quant_policy():
+    hlo_bytes, predicted = _stored_dsi_bytes_of_lowered_sweep("sharded")
+    assert hlo_bytes == predicted != 0

@@ -89,3 +89,30 @@ def test_int16_dsi_accumulation_and_saturation():
     assert float(dsi_lib.saturation_fraction(acc)) == 1.0
     ok = jnp.full((1, 2, 2), 1000, dsi_lib.DSI_ACCUM_DTYPE)
     assert float(dsi_lib.saturation_fraction(ok)) == 0.0
+
+
+def test_integer_vote_rounding_half_away():
+    """Half-integer votes must round half-AWAY-from-zero (the RTL and
+    `quant/fixed_point` convention), not half-to-even like `jnp.round`.
+
+    A bilinear event at x = n + 0.5 produces exact 0.5-weight votes; with
+    an integer DSI those used to round 0.5 -> 0 and 2.5 -> 2 (half-even),
+    diverging from the fixed-point quantizers one vote at a time."""
+    from repro.quant.fixed_point import round_half_away
+
+    halves = jnp.array([-2.5, -1.5, -0.5, 0.5, 1.5, 2.5], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(round_half_away(halves)), [-3.0, -2.0, -1.0, 1.0, 2.0, 3.0]
+    )
+    # and NOT the half-even results [-2, -2, -0, 0, 2, 2]
+    assert not np.array_equal(np.asarray(jnp.round(halves)),
+                              np.asarray(round_half_away(halves)))
+
+    # end to end: one event exactly between two columns, integer DSI
+    x = jnp.full((NZ, 1), 10.5, jnp.float32)
+    y = jnp.full((NZ, 1), 7.0, jnp.float32)
+    dsi0 = jnp.zeros((NZ, H, W), jnp.int32)
+    out = vote_onehot_matmul(dsi0, x, y, w=W, h=H, mode="bilinear")
+    # both 0.5-weight voxels round up to 1 (half-even would drop both to 0)
+    assert int(out[0, 7, 10]) == 1
+    assert int(out[0, 7, 11]) == 1
