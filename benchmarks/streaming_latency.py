@@ -63,6 +63,31 @@ lucky draw. Every session's result is asserted bitwise-equal to
 offline. `ci.yml` re-applies both this gate and the dispatch-policy
 gate from the persisted artifact.
 
+Fifth axis: SESSION CHURN ("session_churn" section). The multi-stream
+sweep holds membership fixed; real rigs do not — cameras join and drop
+while the dispatcher is saturated. Here a MultiStreamEngine runs
+`n_stayers` steady trickle sessions while one "leaver" session streams
+its whole sequence at double rate and flushes out mid-run, after which
+a "joiner" session is admitted on the fly and streams its whole
+sequence at double rate — so the membership changes under load but
+every session still pushes the full sequence and must come out
+bitwise-equal to offline. The gate is structural: the dispatcher must
+keep cross-stream coalescing alive across the membership change
+(cross-stream groups both before the leave and after the join) and end
+with an empty queue.
+
+Sixth axis: the measured COST TABLE + "cost_model" section. The warm
+policy and churn runs carry an opt-in `SweepProfiler` that records
+warm, unshadowed per-variant sweep wall times into one shared
+`CostTable`, persisted to `cost_table.json` (same atomic-write
+discipline as BENCH_emvs.json). The section records the affine
+calibration report (per-backend dispatch overhead + per-row rate and
+fit error) and the burst replay gate (`check_slo_burst`): on the
+recorded table the SLO-aware adaptive policy must dispatch no more
+groups than "throughput" and meet its predicted p99 deadline —
+deterministic, because the replay runs in virtual time against the
+persisted table (docs/dispatch_planning.md).
+
     PYTHONPATH=src python benchmarks/streaming_latency.py [--dry-run]
 """
 from __future__ import annotations
@@ -96,6 +121,8 @@ from repro.events.simulator import (
     simulate_events,
     slice_trajectory,
 )
+from repro.profiling import CostTable, SweepProfiler, fit_affine_model
+from repro.serving.dispatch_replay import check_slo_burst
 from repro.serving.emvs_stream import (
     EMVSStreamEngine,
     MultiStreamEngine,
@@ -183,9 +210,11 @@ def _precompile_variants(cam, dsi_cfg, frames, segs, opts, scfg) -> None:
             pcs.points.block_until_ready()
 
 
-def _stream_policy_once(cam, dsi_cfg, traj, ev, opts, scfg, chunk_events):
+def _stream_policy_once(cam, dsi_cfg, traj, ev, opts, scfg, chunk_events,
+                        profiler=None):
     """One timed streaming run: per-segment completion timeline + stats."""
-    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts, scfg)
+    engine = EMVSStreamEngine(cam, dsi_cfg, traj, opts, scfg,
+                              profiler=profiler)
     timeline: list[tuple[float, tuple[int, int]]] = []
     t0 = time.perf_counter()
     for c in iter_event_chunks(ev, chunk_events):
@@ -200,11 +229,16 @@ def _stream_policy_once(cam, dsi_cfg, traj, ev, opts, scfg, chunk_events):
 
 
 def dispatch_policy_sweep(cam, dsi_cfg, traj, ev, opts, e_frame, frames,
-                          ref, repeats: int) -> list[dict]:
+                          ref, repeats: int,
+                          table: CostTable | None = None) -> list[dict]:
     """Policy A/B: sustained segments/s and p50/p99 per-segment
     first-depth latency per (load profile x dispatch policy), measured
     warm, best of `repeats`. Every run is asserted bitwise-equal to the
-    offline reference — the policies may only move the schedule."""
+    offline reference — the policies may only move the schedule. When
+    `table` is given, every run carries a fresh `SweepProfiler` feeding
+    it: warm unshadowed sweep wall times become the measured cost model
+    (each run re-pays the one-per-variant cold-skip, which only makes
+    the table more conservative)."""
     n_events = int(ev.t.shape[0])
     segs = plan_segments(frames, dsi_cfg, opts)
     scfg_by_policy = {
@@ -226,9 +260,11 @@ def dispatch_policy_sweep(cam, dsi_cfg, traj, ev, opts, e_frame, frames,
     for _ in range(repeats):
         for cfg in configs:
             profile, chunk_events, policy = cfg
+            profiler = SweepProfiler(table=table) if table is not None \
+                else None
             res, t_total, timeline, stats = _stream_policy_once(
                 cam, dsi_cfg, traj, ev, opts, scfg_by_policy[policy],
-                chunk_events)
+                chunk_events, profiler=profiler)
             _assert_bitwise(res, ref, f"policy={policy} {profile}")
             if cfg not in best or t_total < best[cfg][0]:
                 best[cfg] = (t_total, timeline, stats, len(res.segments))
@@ -371,6 +407,151 @@ def multi_stream_sweep(cam, dsi_cfg, traj, ev, opts, e_frame, frames,
     return record
 
 
+def session_churn_sweep(cam, dsi_cfg, traj, ev, opts, e_frame, frames,
+                        ref, n_stayers: int,
+                        table: CostTable | None = None) -> dict:
+    """Membership churn under load: `n_stayers` steady trickle sessions
+    plus one double-rate "leaver" that flushes out mid-run and one
+    double-rate "joiner" admitted on the fly after the leave. Every
+    session — including the churned ones — pushes the full sequence, so
+    all results must be bitwise-equal to offline; the dispatcher-level
+    gate is structural (cross-stream coalescing alive on both sides of
+    the membership change, empty queue at the end)."""
+    segs = plan_segments(frames, dsi_cfg, opts)
+    n_ref = len(ref.segments)
+    top = next(b for b in (4, 3, 5, 7) if n_ref % b != 0)
+    scfg = StreamConfig(events_per_frame=e_frame,
+                        dispatch_policy="throughput",
+                        segment_buckets=(1, 2, top) if top > 2 else (1, 2))
+    _precompile_variants(cam, dsi_cfg, frames, segs, opts, scfg)
+    profiler = SweepProfiler(table=table) if table is not None else None
+    engine = MultiStreamEngine(cam, dsi_cfg, opts, scfg, profiler=profiler)
+    chunks = list(iter_event_chunks(ev, e_frame))
+    half = len(chunks) // 2
+
+    times: dict[str, list[float]] = {}
+    t0 = time.perf_counter()
+
+    def _track(handle, emitted) -> None:
+        now = time.perf_counter() - t0
+        times.setdefault(handle.session_id, []).extend([now] * len(emitted))
+
+    def _settle(handle, res) -> None:
+        t_now = time.perf_counter() - t0
+        done = times.setdefault(handle.session_id, [])
+        done += [t_now] * (len(res.segments) - len(done))
+
+    stayers = [engine.add_session(f"stay{i}", traj=traj)
+               for i in range(n_stayers)]
+    # phase A: stayers at 1x over the first half, leaver at 2x over the
+    # whole sequence — it finishes its stream while the stayers are
+    # mid-flight, then flushes out (the dispatcher keeps serving them)
+    leaver = engine.add_session("leaver", traj=traj)
+    for i, chunk in enumerate(chunks[:half]):
+        for h in stayers:
+            _track(h, h.push(chunk))
+        for j in (2 * i, 2 * i + 1):
+            if j < len(chunks):
+                _track(leaver, leaver.push(chunks[j]))
+    for j in range(2 * half, len(chunks)):  # odd chunk-count remainder
+        _track(leaver, leaver.push(chunks[j]))
+    cross_before = int(engine.stats["dispatcher"]["cross_stream_dispatches"])
+    res_leaver = leaver.flush()
+    _settle(leaver, res_leaver)
+    _assert_bitwise(res_leaver, ref, "churn leaver")
+
+    # phase B: joiner admitted mid-flight, streams the full sequence at
+    # 2x while the stayers finish their second half
+    joiner = engine.add_session("joiner", traj=traj)
+    rest = chunks[half:]
+    for i, chunk in enumerate(rest):
+        for h in stayers:
+            _track(h, h.push(chunk))
+        for j in (2 * i, 2 * i + 1):
+            if j < len(chunks):
+                _track(joiner, joiner.push(chunks[j]))
+    for j in range(2 * len(rest), len(chunks)):
+        _track(joiner, joiner.push(chunks[j]))
+    for h in [*stayers, joiner]:
+        res = h.flush()
+        _settle(h, res)
+        _assert_bitwise(res, ref, f"churn session {h.session_id}")
+    t_total = time.perf_counter() - t0
+
+    d = engine.stats["dispatcher"]
+    n_sessions_total = n_stayers + 2
+    record = {
+        "stayers": n_stayers,
+        "segments_per_session": n_ref,
+        "segment_buckets": list(scfg.segment_buckets),
+        "policy": "throughput",
+        "end_to_end_s": round(t_total, 3),
+        "aggregate_segments_per_s": round(
+            n_sessions_total * n_ref / t_total, 3),
+        "per_session_p99_s": {
+            sid: round(float(np.percentile(np.asarray(ts), 99)), 3)
+            for sid, ts in times.items()},
+        "dispatches": int(d["dispatches"]),
+        "segments": int(d["segments"]),
+        "coalesced_dispatches": int(d["coalesced_dispatches"]),
+        "cross_stream_dispatches": int(d["cross_stream_dispatches"]),
+        "cross_stream_before_leave": cross_before,
+        "cross_stream_after_join": int(d["cross_stream_dispatches"])
+        - cross_before,
+        "pending_segments": int(d["pending_segments"]),
+    }
+    print(f"\nsession-churn sweep ({n_stayers} stayers + leaver + joiner x "
+          f"{n_ref} segments, policy=throughput, "
+          f"buckets {scfg.segment_buckets}):")
+    print(f"  {record['dispatches']} dispatches / {record['segments']} "
+          f"segments, cross-stream {cross_before} before leave + "
+          f"{record['cross_stream_after_join']} after join, "
+          f"agg {record['aggregate_segments_per_s']:.2f} seg/s, "
+          f"p99 {max(record['per_session_p99_s'].values()):.3f}s")
+    print(f"OK: all {n_sessions_total} churned sessions are bitwise-equal "
+          f"to offline")
+    return record
+
+
+def cost_model_section(table: CostTable, table_path: str) -> dict:
+    """Persist the measured cost table, fit the affine model, and run
+    the burst replay gate per measured backend. Returns the
+    "cost_model" section record; the gate asserts are applied by the
+    caller AFTER the section persists (same discipline as the policy
+    gate)."""
+    table.save(table_path)
+    _, report = fit_affine_model(table)
+    print(f"\ncost model ({len(table)} measured variants -> {table_path}):")
+    for backend, rec in sorted(report["backends"].items()):
+        print(f"  [{backend}] overhead {rec['overhead_s'] * 1e3:.3f} ms + "
+              f"{rec['rate_s_per_row'] * 1e6:.2f} us/row; rel error mean "
+              f"{100 * rec['mean_rel_error']:.1f}% max "
+              f"{100 * rec['max_rel_error']:.1f}%")
+    gates = []
+    for backend in sorted({key.backend for key in table.keys()}):
+        try:
+            g = check_slo_burst(table, backend=backend)
+        except AssertionError as exc:
+            # record the regression so the persisted artifact explains
+            # it; the caller re-raises after update_bench_json
+            gates.append({"backend": backend, "failure": str(exc)})
+            continue
+        gates.append(g)
+        tp, slo = g["throughput"], g["slo_adaptive"]
+        print(f"  [{g['backend']}] burst replay: throughput "
+              f"{tp['dispatch_count']} dispatches p99 "
+              f"{tp['predicted_p99_s']:.4f}s; SLO-adaptive "
+              f"{slo['dispatch_count']} dispatches p99 "
+              f"{slo['predicted_p99_s']:.4f}s (deadline "
+              f"{g['target_latency_s']:.4f}s)")
+    return {
+        "table_path": table_path,
+        "measured_variants": len(table),
+        "calibration": report,
+        "slo_burst_gates": gates,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
@@ -379,6 +560,9 @@ def main() -> None:
                     help="chunk size in aggregated frames")
     ap.add_argument("--json-out", default=None,
                     help="BENCH_emvs.json path (default: repo cwd)")
+    ap.add_argument("--cost-table", default="cost_table.json",
+                    help="where to persist the measured sweep cost table "
+                         "(default: ./cost_table.json)")
     args = ap.parse_args()
 
     cam, traj, ev, e_frame, dsi_cfg = build_sequence(args.dry_run)
@@ -455,9 +639,11 @@ def main() -> None:
     print("OK: reconstruction is pose-lag invariant (bitwise)")
 
     # --- dispatch-policy sweep + regression gate --------------------------
+    cost_table = CostTable()
     policy_rows = dispatch_policy_sweep(cam, dsi_cfg, traj, ev, opts, e_frame,
                                         frames, ref,
-                                        repeats=3 if args.dry_run else 5)
+                                        repeats=3 if args.dry_run else 5,
+                                        table=cost_table)
     burst = {r["policy"]: r for r in policy_rows if r["profile"] == "burst"}
     # The gate has two parts. STRUCTURAL (all run sizes): under burst the
     # adaptive policy must actually coalesce — fewer dispatches than
@@ -493,6 +679,19 @@ def main() -> None:
                                    n_sessions=3 if args.dry_run else 4)
     multi_rec["dry_run"] = bool(args.dry_run)
     update_bench_json("multi_stream_sweep", multi_rec, path=args.json_out)
+
+    # --- session churn: membership changes under load ---------------------
+    churn_rec = session_churn_sweep(cam, dsi_cfg, traj, ev, opts, e_frame,
+                                    frames, ref,
+                                    n_stayers=2 if args.dry_run else 3,
+                                    table=cost_table)
+    churn_rec["dry_run"] = bool(args.dry_run)
+    update_bench_json("session_churn", churn_rec, path=args.json_out)
+
+    # --- measured cost model + burst replay gate --------------------------
+    cost_rec = cost_model_section(cost_table, args.cost_table)
+    cost_rec["dry_run"] = bool(args.dry_run)
+    update_bench_json("cost_model", cost_rec, path=args.json_out)
 
     path = update_bench_json("streaming_latency", {
         "dry_run": bool(args.dry_run),
@@ -547,6 +746,37 @@ def main() -> None:
           f"({m['cross_stream_dispatches']} cross-stream groups, bucket "
           f"fill rate {ded['bucket_fill_rate']:.3f} -> "
           f"{m['bucket_fill_rate']:.3f})")
+
+    # session-churn gate: structural — membership change must not kill
+    # cross-stream coalescing on either side, nor strand queued work
+    assert churn_rec["pending_segments"] == 0, (
+        "REGRESSION: dispatcher left work queued after session churn")
+    assert (churn_rec["cross_stream_before_leave"] >= 1
+            and churn_rec["cross_stream_after_join"] >= 1), (
+        f"REGRESSION: cross-stream coalescing died across the membership "
+        f"change ({churn_rec['cross_stream_before_leave']} groups before "
+        f"the leave, {churn_rec['cross_stream_after_join']} after the "
+        f"join)")
+    assert churn_rec["dispatches"] < churn_rec["segments"], (
+        f"REGRESSION: no coalescing under churn "
+        f"({churn_rec['dispatches']} dispatches for "
+        f"{churn_rec['segments']} segments)")
+    print(f"OK: coalescing survives session churn "
+          f"({churn_rec['cross_stream_before_leave']} cross-stream groups "
+          f"before the leave, {churn_rec['cross_stream_after_join']} after "
+          f"the join)")
+
+    # cost-model gate: the burst replay must have passed per backend —
+    # re-raise any failure recorded before the section persisted
+    failed = [g for g in cost_rec["slo_burst_gates"] if "failure" in g]
+    assert not failed, (
+        "REGRESSION: SLO burst replay gate failed: "
+        + "; ".join(f"[{g['backend']}] {g['failure']}" for g in failed))
+    assert cost_rec["measured_variants"] >= 1, (
+        "REGRESSION: profiler recorded no warm sweep samples")
+    print(f"OK: SLO burst replay gate passed on the measured table "
+          f"({cost_rec['measured_variants']} variants -> "
+          f"{cost_rec['table_path']})")
 
 
 if __name__ == "__main__":

@@ -10,8 +10,8 @@ default nearest/integer datapath.
 
     PYTHONPATH=src python examples/emvs_streaming.py \
         [--scene simulation_3walls] [--chunk-frames 2] [--sweep sharded] \
-        [--policy adaptive] [--pose-lag 0.1] [--max-stall 32] \
-        [--sessions 3] [--out /tmp/emvs_stream.npz]
+        [--policy adaptive] [--target-latency-ms 50] [--pose-lag 0.1] \
+        [--max-stall 32] [--sessions 3] [--out /tmp/emvs_stream.npz]
 
 `--sessions N` (N > 1) simulates an N-camera event rig: each session
 gets its own event stream (same scene and trajectory, different sensor
@@ -61,6 +61,18 @@ seconds bit-identically, "off" disables the guard. Pair with
 into the stream and watch the policy respond: a typed rejection is
 printed and the demo stops; surviving policies stream to the end and
 report what was shed.
+
+`--target-latency-ms MS` arms the SLO-aware adaptive planner
+(`StreamConfig(target_latency_s=...)`, requires `--policy adaptive`): a
+cost model predicts the time to drain everything queued and in flight,
+and the dispatcher coalesces while the prediction has slack but
+dispatches eagerly the moment it would blow the deadline. The model
+comes from `cost_table.json` if one has been recorded (run
+`python benchmarks/streaming_latency.py`; see
+docs/dispatch_planning.md), else a built-in rough affine prior. Each
+dispatch prints the PREDICTED drain time next to the ACTUAL wall time
+the queue then took to go idle — the honesty check on the model. The
+reconstruction stays bit-identical; only WHEN groups dispatch moves.
 
 `--budget-frames N` caps the frame store at N aggregated frames' bytes
 (`StreamConfig(frame_store_budget_bytes=...)`): admission stalls
@@ -181,6 +193,12 @@ def main() -> None:
                          "the device keeps up (lone segments go solo, queued "
                          "backlogs coalesce), hold-to-coalesce when the "
                          "in-flight queue saturates (default)")
+    ap.add_argument("--target-latency-ms", type=float, default=None,
+                    help="SLO deadline for the adaptive planner: coalesce "
+                         "while the cost model predicts the queue drains "
+                         "inside this budget, dispatch eagerly otherwise; "
+                         "prints predicted vs actual drain time per "
+                         "dispatch (requires --policy adaptive)")
     ap.add_argument("--pose-lag", type=float, default=None,
                     help="stream poses too, lagging the event front by this "
                          "many seconds (default: fully-known pose oracle)")
@@ -240,6 +258,30 @@ def main() -> None:
     if args.max_stall is not None and not pose_gated:
         ap.error("--max-stall requires --pose-lag: the stall bound only "
                  "applies to a streamed (pose-gated) trajectory")
+    cost_model = None
+    if args.target_latency_ms is not None:
+        if args.policy != "adaptive":
+            ap.error("--target-latency-ms drives the SLO-aware ADAPTIVE "
+                     "planner; use --policy adaptive")
+        if args.sessions > 1:
+            ap.error("--target-latency-ms demos the single-stream SLO "
+                     "planner; use --sessions 1")
+        from repro.profiling import AffineCostModel, CostTable
+        from repro.profiling.cost_model import model_from_table
+        try:
+            table = CostTable.load("cost_table.json")
+            cost_model = model_from_table(table)
+            print(f"SLO planner: deadline {args.target_latency_ms:g} ms, "
+                  f"cost model from cost_table.json "
+                  f"({len(table)} measured variants)")
+        except FileNotFoundError:
+            # rough prior: a few ms of dispatch overhead plus a per-row
+            # rate; real numbers come from the recorded table
+            cost_model = AffineCostModel(params={
+                "batched": (5e-3, 2e-4), "sharded": (1e-2, 1e-4)})
+            print(f"SLO planner: deadline {args.target_latency_ms:g} ms, "
+                  f"built-in affine prior (no cost_table.json — run "
+                  f"benchmarks/streaming_latency.py to record one)")
     if args.corrupt and pose_gated:
         ap.error("--corrupt demos the ingest guard on the plain event "
                  "stream; use it without --pose-lag")
@@ -256,6 +298,10 @@ def main() -> None:
                               opts, StreamConfig(
                                   sweep=args.sweep,
                                   dispatch_policy=args.policy,
+                                  target_latency_s=(
+                                      args.target_latency_ms / 1e3
+                                      if args.target_latency_ms is not None
+                                      else None),
                                   max_stalled_frames=args.max_stall,
                                   hygiene=HygieneConfig(
                                       policy=args.hygiene,
@@ -264,8 +310,35 @@ def main() -> None:
                                   frame_store_budget_bytes=(
                                       frame_budget_bytes(args.budget_frames)
                                       if args.budget_frames else None),
-                                  budget_policy=args.budget_policy))
+                                  budget_policy=args.budget_policy),
+                              cost_model=cost_model)
     t0 = time.time()
+
+    # --target-latency-ms: per-dispatch predicted-vs-actual drain audit.
+    # When a dispatch goes out, snapshot the model's drain prediction;
+    # when the queue next goes fully idle, print it next to the wall
+    # time the drain actually took.
+    drain_watch: list = []  # [dispatch #, t_dispatched, predicted_s]
+    drain_seen = 0
+
+    def watch_drain() -> None:
+        nonlocal drain_seen
+        if args.target_latency_ms is None:
+            return
+        now = time.time() - t0
+        n = engine.stats["dispatches"]
+        if n > drain_seen:
+            pred = engine.predict_drain_s()
+            for k in range(drain_seen + 1, n + 1):
+                drain_watch.append([k, now, pred])
+            drain_seen = n
+        if drain_watch and not engine._inflight \
+                and engine.stats["pending_segments"] == 0:
+            for k, t_disp, pred in drain_watch:
+                print(f"  dispatch #{k}: predicted drain "
+                      f"{pred * 1e3:7.1f} ms, actual "
+                      f"{(now - t_disp) * 1e3:7.1f} ms")
+            drain_watch.clear()
 
     def report(seg, when):
         gt, gtm = ground_truth_depth(cam, scene, seg.T_w_ref)
@@ -322,6 +395,7 @@ def main() -> None:
             if pose_gated:
                 for seg in push_poses_behind(float(np.asarray(chunk.t)[-1])):
                     report(seg, time.time() - t0)
+            watch_drain()
     except StreamHygieneError as e:
         print(f"stream REJECTED by hygiene={args.hygiene!r}: "
               f"{type(e).__name__}: {e}")
@@ -344,6 +418,12 @@ def main() -> None:
     for seg in res.segments:
         if seg.frame_range not in known:
             report(seg, time.time() - t0)
+    watch_drain()  # flush drained the queue: settle the open predictions
+    if args.target_latency_ms is not None:
+        print(f"SLO deadline {args.target_latency_ms:g} ms: "
+              f"{engine.stats['slo_dispatches']} deadline-driven "
+              f"dispatch(es), {engine.stats['slo_holds']} hold(s) "
+              f"with predicted slack")
     print(f"streamed {engine.stats['frames']} frames, "
           f"{engine.stats['dispatches']} dispatches "
           f"({engine.stats['padded_segments']} padded segment rows); "

@@ -254,7 +254,9 @@ def main(argv: Sequence[str] | None = None) -> int:
         print(
             f"{name}: {summary['variants']} compiled variants "
             f"(S buckets {summary['s_buckets']} x capacities {summary['capacities']}, "
-            f"bound {summary['bound']})"
+            f"bound {summary['bound']}, "
+            f"{summary.get('planner_groups_checked', 0)} planner-emitted "
+            f"group(s) audited)"
         )
     print(
         f"{len(report['entries'])} program(s) linted: "

@@ -208,9 +208,15 @@ def audit_variant_space(
       buckets never exceed the configured bucket count — the jit-cache
       bound the streaming docs promise;
     - coverage: every dispatchable group size and frame count maps into
-      an enumerated variant (no cache-key fragmentation at runtime).
+      an enumerated variant (no cache-key fragmentation at runtime);
+    - planner usage: the actual ``DispatchPlanner`` is driven over
+      exhaustive single-capacity and mixed loads (every frame count up
+      to ``max_segment_frames``, every queue depth up to one past the
+      top S bucket, both fairness policies) and every group it emits
+      must land on an enumerated (S bucket, capacity) variant — the
+      planner can never be the component that fragments the jit cache.
     """
-    from repro.core.pipeline import bucket_capacity
+    from repro.core.pipeline import DispatchPlanner, bucket_capacity
     from repro.serving.sweep_dispatcher import enumerate_variant_space
 
     findings: list[Finding] = []
@@ -286,10 +292,52 @@ def audit_variant_space(
             )
             break
 
+    # planner usage: drive the real DispatchPlanner (the partition the
+    # dispatcher stages) over exhaustive loads; every emitted group's
+    # (padded S bucket, capacity) must be an enumerated variant
+    planner = DispatchPlanner(tuple(s_buckets))
+    variant_set = {(s, c) for s in s_buckets for c in capacities}
+    groups_checked = 0
+
+    def check_groups(groups) -> bool:
+        nonlocal groups_checked
+        for group, cap in groups:
+            groups_checked += 1
+            b = next((x for x in s_buckets if x >= len(group)), None)
+            if b is None or (b, cap) not in variant_set:
+                report(
+                    "variant-coverage-gap",
+                    f"planner emitted a group of {len(group)} segments at "
+                    f"capacity {cap} -> variant ({b}, {cap}) outside the "
+                    f"enumerated space",
+                )
+                return False
+        return True
+
+    ok = True
+    for f in range(1, max_segment_frames + 1):
+        for n in range(1, top + 2):  # one past the top bucket: must split
+            segs = [(k * f, (k + 1) * f) for k in range(n)]
+            ok = ok and check_groups(planner.plan(segs))
+        if not ok:
+            break
+    if ok:
+        # mixed load: every frame count in one queue (capacity changes
+        # seal groups), fanned over two sessions under both fairness
+        # policies through the tagged planner the multi-stream engine uses
+        segs, frame = [], 0
+        for f in range(1, max_segment_frames + 1):
+            segs.append((frame, frame + f))
+            frame += f
+        items = [(k % 2, seg) for k, seg in enumerate(segs)]
+        for fairness in ("fifo", "round_robin"):
+            check_groups(planner.plan_tagged(items, fairness=fairness))
+
     summary = {
         "s_buckets": tuple(s_buckets),
         "capacities": tuple(capacities),
         "variants": len(variants),
         "bound": bound,
+        "planner_groups_checked": groups_checked,
     }
     return findings, summary

@@ -326,6 +326,136 @@ def dispatch_group_head_tagged(queue: Sequence[tuple[Any, tuple[int, int]]],
     return indices, cap, sealed
 
 
+class DispatchPlanner:
+    """Dispatch-group planning, optionally cost-aware.
+
+    The partition rules are the streaming coalescer's, unchanged: head
+    groups via `dispatch_group_head_tagged`, fairness anchoring via
+    `FAIRNESS_POLICIES`. What the class adds over the module-level
+    functions (which now delegate here) is *prediction*: given a
+    duck-typed cost model — anything with
+    ``predict_sweep_s(key) -> float | None`` — and a ``variant_of``
+    factory mapping a padded ``(s_bucket, capacity)`` dispatch shape to
+    the model's key type, the planner predicts what a group costs and
+    how long draining a queue would take. That is the signal the
+    SLO-aware adaptive policy (`StreamConfig(target_latency_s=)`) and
+    the deterministic replayer (`repro.serving.dispatch_replay`)
+    schedule against.
+
+    A cost model NEVER changes which groups form — only when a
+    scheduler chooses to dispatch them. With ``cost_model=None`` (or
+    one that predicts ``None``) every prediction is ``None`` and
+    consumers fall back to the pre-cost-model heuristics, which is how
+    the "latency"/"throughput" policies and the null-model adaptive
+    policy keep bitwise-identical schedules
+    (tests/test_adaptive_dispatch.py pins this). See
+    docs/dispatch_planning.md for the full decision table.
+
+    `s_buckets` are the fixed segment-axis pad sizes (ascending; the
+    last is the planning `max_group`): predictions must account for the
+    PADDED rows a dispatch sweeps, not just the real ones, or the model
+    would reward under-filled buckets.
+    """
+
+    def __init__(self, s_buckets: Sequence[int],
+                 minimum: int = SEGMENT_BUCKET_MIN, *,
+                 cost_model=None, variant_of=None):
+        s_buckets = tuple(s_buckets)
+        if not s_buckets:
+            raise ValueError("s_buckets must be non-empty")
+        if list(s_buckets) != sorted(set(s_buckets)) or s_buckets[0] < 1:
+            raise ValueError(
+                f"s_buckets must be strictly ascending positive ints, got "
+                f"{s_buckets}")
+        self.s_buckets = s_buckets
+        self.max_group = s_buckets[-1]
+        self.minimum = minimum
+        self.cost_model = cost_model
+        self.variant_of = variant_of
+
+    # --- partitioning (the PR 5/6 rules, verbatim) ------------------------
+
+    def head(self, segs: Sequence[tuple[int, int]]) -> tuple[int, int, bool]:
+        return dispatch_group_head(segs, self.max_group, self.minimum)
+
+    def head_tagged(self, queue: Sequence[tuple[Any, tuple[int, int]]], *,
+                    anchor: int = 0) -> tuple[list[int], int, bool]:
+        return dispatch_group_head_tagged(queue, self.max_group,
+                                          self.minimum, anchor=anchor)
+
+    def plan(self, segs: Sequence[tuple[int, int]]
+             ) -> list[tuple[list[tuple[int, int]], int]]:
+        groups: list[tuple[list[tuple[int, int]], int]] = []
+        i = 0
+        while i < len(segs):
+            n, cap, _ = self.head(segs[i:])
+            groups.append((list(segs[i:i + n]), cap))
+            i += n
+        return groups
+
+    def plan_tagged(self, items: Sequence[tuple[Any, tuple[int, int]]], *,
+                    fairness: str = "fifo"
+                    ) -> list[tuple[list[tuple[Any, tuple[int, int]]], int]]:
+        if fairness not in FAIRNESS_POLICIES:
+            raise ValueError(f"unknown fairness {fairness!r}: expected one "
+                             f"of {FAIRNESS_POLICIES}")
+        queue = list(items)
+        order: list[Any] = []
+        for tag, _ in queue:
+            if tag not in order:
+                order.append(tag)
+        cursor = 0
+        groups: list[tuple[list[tuple[Any, tuple[int, int]]], int]] = []
+        while queue:
+            anchor = 0
+            if fairness == "round_robin" and len(order) > 1:
+                present = {tag for tag, _ in queue}
+                for k in range(len(order)):
+                    tag = order[(cursor + k) % len(order)]
+                    if tag in present:
+                        cursor = (cursor + k + 1) % len(order)
+                        anchor = next(i for i, (t, _) in enumerate(queue)
+                                      if t == tag)
+                        break
+            idx, cap, _ = self.head_tagged(queue, anchor=anchor)
+            groups.append(([queue[i] for i in idx], cap))
+            for i in reversed(idx):
+                queue.pop(i)
+        return groups
+
+    # --- prediction -------------------------------------------------------
+
+    def s_bucket(self, n: int) -> int:
+        """Smallest fixed S bucket a group of `n` segments pads to."""
+        for b in self.s_buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"group of {n} exceeds top segment bucket "
+                         f"{self.s_buckets[-1]}")
+
+    def predict_group_s(self, n_segments: int, capacity: int) -> float | None:
+        """Predicted wall time of one dispatched group, or None when the
+        model (or the variant factory) has nothing to say."""
+        if self.cost_model is None or self.variant_of is None:
+            return None
+        key = self.variant_of(self.s_bucket(n_segments), capacity)
+        return self.cost_model.predict_sweep_s(key)
+
+    def predict_drain_s(self, items: Sequence[tuple[Any, tuple[int, int]]],
+                        *, fairness: str = "fifo") -> float | None:
+        """Predicted serial time to sweep an entire tagged queue, planned
+        exactly as a full drain would partition it. None unless EVERY
+        group gets a prediction — a partially predictable drain is not a
+        deadline anyone should schedule against."""
+        total = 0.0
+        for group, cap in self.plan_tagged(items, fairness=fairness):
+            cost = self.predict_group_s(len(group), cap)
+            if cost is None:
+                return None
+            total += cost
+        return total
+
+
 def plan_dispatch_groups(segs: Sequence[tuple[int, int]], max_group: int,
                          minimum: int = SEGMENT_BUCKET_MIN
                          ) -> list[tuple[list[tuple[int, int]], int]]:
@@ -339,15 +469,19 @@ def plan_dispatch_groups(segs: Sequence[tuple[int, int]], max_group: int,
     the bucket planning `run_emvs`'s capacity map performs offline,
     restated under the streaming FIFO-release constraint — the
     coalescing-planner property test pins these invariants for any
-    segment sequence.
+    segment sequence. (Delegates to a cost-model-free `DispatchPlanner`;
+    the partition is identical by construction.)
     """
-    groups: list[tuple[list[tuple[int, int]], int]] = []
-    i = 0
-    while i < len(segs):
-        n, cap, _ = dispatch_group_head(segs[i:], max_group, minimum)
-        groups.append((list(segs[i:i + n]), cap))
-        i += n
-    return groups
+    return DispatchPlanner(_planner_buckets(max_group), minimum).plan(segs)
+
+
+def _planner_buckets(max_group: int) -> tuple[int, ...]:
+    # module-level planners know only the cap, not the full bucket set —
+    # partitioning needs nothing else (prediction, which does, goes
+    # through a DispatchPlanner constructed with the real buckets)
+    if max_group < 1:
+        raise ValueError(f"max_group must be >= 1, got {max_group}")
+    return (max_group,)
 
 
 def plan_dispatch_groups_tagged(
@@ -360,6 +494,8 @@ def plan_dispatch_groups_tagged(
     what the multi-tenant `SweepDispatcher` dispatches when it drains N
     sessions' closed segments, restated as a pure function for the
     property tests. Each group is `(tagged_segments, frame_capacity)`.
+    (Delegates to a cost-model-free `DispatchPlanner`; the partition is
+    identical by construction.)
 
     `fairness` picks how successive groups anchor (FAIRNESS_POLICIES):
 
@@ -381,33 +517,8 @@ def plan_dispatch_groups_tagged(
     sharing one `bucket_capacity`. With a single tag both policies
     reduce to `plan_dispatch_groups`.
     """
-    if fairness not in FAIRNESS_POLICIES:
-        raise ValueError(f"unknown fairness {fairness!r}: expected one of "
-                         f"{FAIRNESS_POLICIES}")
-    queue = list(items)
-    order: list[Any] = []
-    for tag, _ in queue:
-        if tag not in order:
-            order.append(tag)
-    cursor = 0
-    groups: list[tuple[list[tuple[Any, tuple[int, int]]], int]] = []
-    while queue:
-        anchor = 0
-        if fairness == "round_robin" and len(order) > 1:
-            present = {tag for tag, _ in queue}
-            for k in range(len(order)):
-                tag = order[(cursor + k) % len(order)]
-                if tag in present:
-                    cursor = (cursor + k + 1) % len(order)
-                    anchor = next(i for i, (t, _) in enumerate(queue)
-                                  if t == tag)
-                    break
-        idx, cap, _ = dispatch_group_head_tagged(queue, max_group, minimum,
-                                                 anchor=anchor)
-        groups.append(([queue[i] for i in idx], cap))
-        for i in reversed(idx):
-            queue.pop(i)
-    return groups
+    return DispatchPlanner(_planner_buckets(max_group),
+                           minimum).plan_tagged(items, fairness=fairness)
 
 
 def _host_frames(frames: EventFrames) -> EventFrames:

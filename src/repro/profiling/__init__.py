@@ -1,0 +1,47 @@
+"""Profile-then-plan support for dispatch planning.
+
+The package closes the ROADMAP's "measured cost model for dispatch
+planning" loop in three pieces:
+
+- :mod:`repro.profiling.cost_table` — a persisted, schema-versioned
+  table of warm per-variant sweep wall times, keyed by
+  ``(s_bucket, capacity, backend, interpolation, quantized)``.
+- :mod:`repro.profiling.cost_model` — cost models consumed by the
+  planner: a null model (pre-cost-model behavior), an affine
+  per-backend fit (dispatch overhead + per-segment-row cost), and a
+  measured-table lookup that falls back to the affine fit when a key
+  is out of distribution.
+- :mod:`repro.profiling.recorder` — an opt-in online recorder wired
+  into ``SweepDispatcher`` that feeds the table from live traffic and
+  captures the dispatch trace the replayer
+  (:mod:`repro.serving.dispatch_replay`) re-simulates.
+
+``python -m repro.profiling.calibrate`` fits the model from a table
+and emits a calibration report; see docs/dispatch_planning.md.
+"""
+
+from repro.profiling.cost_table import (
+    COST_TABLE_SCHEMA_VERSION,
+    CostTable,
+    CostTableError,
+    VariantKey,
+)
+from repro.profiling.cost_model import (
+    AffineCostModel,
+    NullCostModel,
+    TableCostModel,
+    fit_affine_model,
+)
+from repro.profiling.recorder import SweepProfiler
+
+__all__ = [
+    "COST_TABLE_SCHEMA_VERSION",
+    "CostTable",
+    "CostTableError",
+    "VariantKey",
+    "AffineCostModel",
+    "NullCostModel",
+    "TableCostModel",
+    "fit_affine_model",
+    "SweepProfiler",
+]

@@ -170,7 +170,11 @@ class StreamConfig:
     dispatching, highest sustained segments/s; "adaptive" = never wait
     while the device keeps up — a lone closed segment dispatches solo, a
     queued backlog coalesces — and hold-to-coalesce once the in-flight
-    queue saturates; pick it unless you need one extreme). Back-pressure:
+    queue saturates; pick it unless you need one extreme). With a cost
+    model attached and `target_latency_s` set, "adaptive" schedules
+    against a predicted drain-time deadline instead of queue depth —
+    the policy/fairness/cost-model/SLO decision table lives in
+    docs/dispatch_planning.md. Back-pressure:
     `max_inflight` bounds device-side work in flight, and
     `max_stalled_frames` bounds the pose-stall queue — with a stalled
     tracker the event front would otherwise grow the stall queue (and the
@@ -244,6 +248,20 @@ class StreamConfig:
     max_inflight: int = 2
     # How the closed-segment coalescing queue drains (DISPATCH_POLICIES).
     dispatch_policy: str = "adaptive"
+    # Latency SLO for the adaptive policy, in seconds (None = off). With
+    # a cost model attached to the engine/dispatcher, "adaptive" becomes
+    # deadline-driven instead of depth-driven: it keeps coalescing while
+    # the PREDICTED time to drain the queue (in-flight sweeps + the
+    # planned partition of everything pending) still fits under this
+    # deadline, and dispatches the moment the prediction exceeds it —
+    # "dispatch now iff predicted queue-drain time exceeds the
+    # deadline". Sealed groups (which can never grow) always dispatch.
+    # Without a cost model, or when the model cannot predict the queue
+    # (out-of-distribution variant), the policy falls back to the
+    # depth-based rule, so schedules are bitwise-identical to the
+    # pre-SLO engine. Ignored by "latency"/"throughput". Full decision
+    # table: docs/dispatch_planning.md.
+    target_latency_s: float | None = None
     # How dispatch groups anchor on the shared multi-session queue
     # (repro.core.pipeline.FAIRNESS_POLICIES): "fifo" = strict global
     # arrival order, "round_robin" = starvation-bounded rotation over
@@ -299,6 +317,10 @@ class StreamConfig:
             raise ValueError(
                 f"unknown fairness {self.fairness!r}: expected one of "
                 f"{FAIRNESS_POLICIES}")
+        if self.target_latency_s is not None and not self.target_latency_s > 0:
+            raise ValueError(
+                f"target_latency_s must be > 0 seconds (or None for no "
+                f"SLO), got {self.target_latency_s}")
         if self.max_stalled_frames is not None and self.max_stalled_frames < 1:
             raise ValueError(
                 f"max_stalled_frames must be >= 1 (or None for unbounded), "
@@ -374,13 +396,14 @@ class EMVSStreamEngine:
                  traj: Trajectory | TrajectoryBuffer | None,
                  opts: EMVSOptions = EMVSOptions(),
                  stream_cfg: StreamConfig = StreamConfig(), *,
-                 mesh=None):
+                 mesh=None, cost_model=None, profiler=None):
         self.cam = cam
         self.dsi_cfg = dsi_cfg
         self.opts = opts
         self.stream_cfg = stream_cfg
         self._dispatcher = SweepDispatcher(cam, dsi_cfg, opts, stream_cfg,
-                                           mesh=mesh)
+                                           mesh=mesh, cost_model=cost_model,
+                                           profiler=profiler)
         self._session = StreamSession("cam0", self._dispatcher, traj)
 
     # --- delegation to the session/dispatcher layers ----------------------
@@ -434,9 +457,20 @@ class EMVSStreamEngine:
         d = self._dispatcher.stats
         for key in ("dispatches", "padded_segments", "pending_segments",
                     "max_pending", "coalesced_dispatches",
-                    "coalesced_segments", "cross_stream_dispatches"):
+                    "coalesced_segments", "cross_stream_dispatches",
+                    "slo_dispatches", "slo_holds"):
             out[key] = d[key]
+        # latency histograms are dicts: copy so callers can't mutate the
+        # dispatcher's accumulators through the stats view
+        out["queue_wait_s"] = dict(d["queue_wait_s"])
+        out["sweep_time_s"] = dict(d["sweep_time_s"])
         return out
+
+    def predict_drain_s(self) -> float | None:
+        """Cost-model prediction of the time to drain everything queued
+        and in flight, or None without a predicting cost model
+        (docs/dispatch_planning.md)."""
+        return self._dispatcher.predict_drain_s()
 
     # --- the single-stream API, unchanged ---------------------------------
 
@@ -540,13 +574,14 @@ class MultiStreamEngine:
     def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig,
                  opts: EMVSOptions = EMVSOptions(),
                  stream_cfg: StreamConfig = StreamConfig(), *,
-                 mesh=None):
+                 mesh=None, cost_model=None, profiler=None):
         self.cam = cam
         self.dsi_cfg = dsi_cfg
         self.opts = opts
         self.stream_cfg = stream_cfg
         self.dispatcher = SweepDispatcher(cam, dsi_cfg, opts, stream_cfg,
-                                          mesh=mesh)
+                                          mesh=mesh, cost_model=cost_model,
+                                          profiler=profiler)
         self._sessions: dict[str, StreamSession] = {}
 
     @property

@@ -24,6 +24,7 @@ along — legal for the same independence reason).
 from __future__ import annotations
 
 from collections import deque
+from time import perf_counter
 from typing import NamedTuple
 
 import jax
@@ -34,15 +35,59 @@ from repro.core.detection import DepthMap
 from repro.core.dsi import DSIConfig
 from repro.core.geometry import SE3
 from repro.core.pipeline import (
+    DispatchPlanner,
     EMVSOptions,
     SegmentResult,
-    dispatch_group_head_tagged,
     pad_segment_rows,
     process_segments_batched,
 )
 from repro.core.pointcloud import PointCloud, depth_maps_to_points
+from repro.profiling.cost_table import VariantKey
 
 Array = jax.Array
+
+# Latency histogram bin edges (seconds): log-decade bins wide enough to
+# cover a sub-millisecond warm CPU sweep and a multi-second cold compile.
+_HIST_EDGES_S = (1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0)
+
+
+class _LatencyHist:
+    """Fixed-log-bin latency histogram over (t_in, t_out) sample pairs.
+
+    Beyond the usual count/total/max, it keeps the raw timestamp sums so
+    consumers can verify the reconciliation identity
+    ``total_s == t_out_sum - t_in_sum`` — the sum of waits IS the sum of
+    dispatch timestamps minus the sum of enqueue timestamps (resp.
+    harvest minus dispatch for sweep times), so a histogram that lost or
+    double-counted a sample cannot satisfy it
+    (tests/test_adaptive_dispatch.py asserts this on live engines).
+    """
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total_s = 0.0
+        self.max_s = 0.0
+        self.t_in_sum = 0.0
+        self.t_out_sum = 0.0
+        self.bins = [0] * (len(_HIST_EDGES_S) + 1)
+
+    def observe(self, t_in: float, t_out: float) -> None:
+        dt = t_out - t_in  # perf_counter is monotonic: never negative
+        self.count += 1
+        self.total_s += dt
+        self.max_s = max(self.max_s, dt)
+        self.t_in_sum += t_in
+        self.t_out_sum += t_out
+        i = 0
+        while i < len(_HIST_EDGES_S) and dt >= _HIST_EDGES_S[i]:
+            i += 1
+        self.bins[i] += 1
+
+    def snapshot(self) -> dict:
+        return {"count": self.count, "total_s": self.total_s,
+                "max_s": self.max_s, "t_in_sum": self.t_in_sum,
+                "t_out_sum": self.t_out_sum,
+                "bin_edges_s": list(_HIST_EDGES_S), "bins": list(self.bins)}
 
 
 def enumerate_variant_space(stream_cfg, max_segment_frames: int, *,
@@ -92,6 +137,9 @@ class _InFlight(NamedTuple):
     dms: DepthMap
     pcs: PointCloud
     owners: tuple | None = None  # per-row owning sessions
+    key: VariantKey | None = None  # compiled-variant identity of the sweep
+    dispatched_t: float = 0.0  # host perf_counter at dispatch
+    unshadowed: bool = False  # dispatched onto an otherwise idle device
 
 
 class SweepDispatcher:
@@ -108,7 +156,8 @@ class SweepDispatcher:
 
     def __init__(self, cam: CameraModel, dsi_cfg: DSIConfig,
                  opts: EMVSOptions = EMVSOptions(),
-                 stream_cfg=None, *, mesh=None):
+                 stream_cfg=None, *, mesh=None, cost_model=None,
+                 profiler=None):
         if stream_cfg is None:
             from repro.serving.emvs_stream import StreamConfig
 
@@ -139,6 +188,19 @@ class SweepDispatcher:
                     "would silently ignore it")
             self.mesh = None
             self._segment_buckets = stream_cfg.segment_buckets
+        # Cost-aware planning (docs/dispatch_planning.md): the planner
+        # owns the partition rules; `cost_model` (duck-typed:
+        # predict_sweep_s(key) -> float | None) lets the SLO-aware
+        # adaptive policy predict queue-drain time, `profiler` (a
+        # repro.profiling.SweepProfiler) opts into online cost-table
+        # recording + dispatch-trace capture. Both default off — the
+        # scheduler is then bitwise-identical to the pre-cost-model
+        # engine.
+        self.cost_model = cost_model
+        self.profiler = profiler
+        self.planner = DispatchPlanner(
+            self._segment_buckets, cost_model=cost_model,
+            variant_of=self._variant_key)
         self._sessions: list = []  # registration = round-robin order
         self._rr_cursor = 0
         self.default_owner = None  # harvest target for untagged in-flight
@@ -154,10 +216,31 @@ class SweepDispatcher:
         # mark; cross_stream_dispatches counts groups whose rows span more
         # than one session — the coalescing the multi-tenant benchmark
         # gates on.
+        # slo_dispatches / slo_holds count the SLO-aware adaptive
+        # policy's decisions (0 unless target_latency_s + a cost model
+        # are both active); queue_wait_s / sweep_time_s are _LatencyHist
+        # snapshots (enqueue->dispatch per segment, dispatch->harvest
+        # per sweep) refreshed on every observation.
+        self._queue_wait_hist = _LatencyHist()
+        self._sweep_time_hist = _LatencyHist()
+        self._session_wait_hists: dict[int, _LatencyHist] = {}
+        self._enqueued_t: dict[tuple[int, tuple[int, int]], float] = {}
         self.stats = {"segments": 0, "dispatches": 0, "padded_segments": 0,
                       "pending_segments": 0, "max_pending": 0,
                       "coalesced_dispatches": 0, "coalesced_segments": 0,
-                      "cross_stream_dispatches": 0}
+                      "cross_stream_dispatches": 0,
+                      "slo_dispatches": 0, "slo_holds": 0,
+                      "queue_wait_s": self._queue_wait_hist.snapshot(),
+                      "sweep_time_s": self._sweep_time_hist.snapshot()}
+
+    def _variant_key(self, s_bucket: int, capacity: int) -> VariantKey:
+        """The compiled-variant identity of a padded dispatch shape —
+        the cost table's key axes (repro.profiling.cost_table)."""
+        return VariantKey(
+            s_bucket=s_bucket, capacity=capacity,
+            backend=self.stream_cfg.sweep,
+            interpolation=self.opts.voting,
+            quantized=self.opts.quantized)
 
     # --- session plumbing -------------------------------------------------
 
@@ -165,10 +248,19 @@ class SweepDispatcher:
         self._sessions.append(session)
         if self.default_owner is None:
             self.default_owner = session
+        # per-session queue-wait histogram, mirrored into session stats
+        hist = _LatencyHist()
+        self._session_wait_hists[id(session)] = hist
+        session.stats["queue_wait_s"] = hist.snapshot()
 
     def enqueue(self, session, closed: list[tuple[int, int]]) -> None:
         """Append one session's newly closed segments to the tagged queue
         (arrival order; they dispatch on the next pump/drain)."""
+        t = perf_counter()
+        for seg in closed:
+            self._enqueued_t[(id(session), seg)] = t
+            if self.profiler is not None:
+                self.profiler.note_enqueue(t, session, seg)
         self._pending.extend((session, seg) for seg in closed)
         self._note_queue_depth()
 
@@ -309,20 +401,39 @@ class SweepDispatcher:
         if not self._pending:
             return None
         policy = self.stream_cfg.dispatch_policy
-        if (policy == "adaptive" and not final
-                and len(self._inflight) >= self.stream_cfg.max_inflight):
-            return None  # device saturated: coalesce until a slot frees
+        # SLO mode (docs/dispatch_planning.md): with a deadline AND a
+        # cost model that can price the whole queue, the adaptive policy
+        # schedules against predicted drain time instead of in-flight
+        # depth — dispatch now iff draining everything (in-flight sweeps
+        # + the planned partition of the pending queue) is predicted to
+        # blow the deadline, else keep coalescing. `slo_urgent is None`
+        # means SLO inactive (no deadline, null model, or an
+        # out-of-distribution variant): fall back to the depth rule, so
+        # the schedule is bitwise-identical to the pre-SLO engine.
+        slo_urgent = None
+        if policy == "adaptive" and not final:
+            if self.stream_cfg.target_latency_s is not None:
+                drain = self.predict_drain_s()
+                if drain is not None:
+                    slo_urgent = drain > self.stream_cfg.target_latency_s
+            if (slo_urgent is None
+                    and len(self._inflight) >= self.stream_cfg.max_inflight):
+                return None  # device saturated: coalesce until a slot frees
         for sess in self._anchor_candidates(only):
             if only is not None and self._oldest_pending_start(sess) is None:
                 return None  # the drained session has nothing queued
             anchor = next(i for i, (s, _) in enumerate(self._pending)
                           if s is sess)
-            idx, cap, sealed = dispatch_group_head_tagged(
-                self._pending, self._segment_buckets[-1], anchor=anchor)
+            idx, cap, sealed = self.planner.head_tagged(
+                self._pending, anchor=anchor)
             if policy == "latency":
                 idx = idx[:1]  # one sweep per segment — the baseline
             elif policy == "throughput" and not (final or sealed):
                 continue  # this anchor's group can still grow: try the next
+            elif slo_urgent is not None and not (slo_urgent or sealed):
+                # SLO slack and the group can still grow: hold it (a
+                # sealed group gains nothing by waiting, so it goes)
+                continue
             group = [self._pending[i] for i in idx]
             for i in reversed(idx):
                 self._pending.pop(i)
@@ -334,8 +445,34 @@ class SweepDispatcher:
                                        % len(self._sessions))
                 except ValueError:
                     pass
+            if slo_urgent:
+                self.stats["slo_dispatches"] += 1
             return group, cap
+        if slo_urgent is False:
+            self.stats["slo_holds"] += 1
         return None
+
+    def predict_drain_s(self) -> float | None:
+        """Predicted serial time to complete every in-flight sweep and
+        drain the whole pending queue under the cost model. In-flight
+        sweeps count at full predicted cost (their progress is not
+        observable without a device sync — the estimate is deliberately
+        conservative). None when any component is unpredictable."""
+        if self.cost_model is None:
+            return None
+        total = 0.0
+        for inf in self._inflight:
+            if inf.key is None:
+                return None
+            cost = self.cost_model.predict_sweep_s(inf.key)
+            if cost is None:
+                return None
+            total += cost
+        pending = self.planner.predict_drain_s(
+            self._pending, fairness=self.stream_cfg.fairness)
+        if pending is None:
+            return None
+        return total + pending
 
     def _s_bucket(self, n: int) -> int:
         for b in self._segment_buckets:
@@ -381,11 +518,26 @@ class SweepDispatcher:
         batch = pad_segment_rows(rows, cap)
         # async dispatch: both calls below return with the sweep enqueued,
         # so the caller stages the next batch while this one votes
+        unshadowed = not self._inflight  # nothing older occupies the device
+        t_disp = perf_counter()
+        key = self._variant_key(s_pad, cap)
+        for sess, seg in group:
+            t_enq = self._enqueued_t.pop((id(sess), seg), None)
+            if t_enq is not None:
+                self._queue_wait_hist.observe(t_enq, t_disp)
+                sess_hist = self._session_wait_hists.get(id(sess))
+                if sess_hist is not None:
+                    sess_hist.observe(t_enq, t_disp)
+                    sess.stats["queue_wait_s"] = sess_hist.snapshot()
+        self.stats["queue_wait_s"] = self._queue_wait_hist.snapshot()
+        if self.profiler is not None:
+            self.profiler.note_dispatch(t_disp, group, key)
         dsis, dms = self._sweep(batch)
         pcs = depth_maps_to_points(self.cam, dms, SE3(batch.ref_R, batch.ref_t))
         self._inflight.append(_InFlight(
             [seg for _, seg in group], batch.ref_R, batch.ref_t, dsis, dms,
-            pcs, owners=tuple(sess for sess, _ in group)))
+            pcs, owners=tuple(sess for sess, _ in group), key=key,
+            dispatched_t=t_disp, unshadowed=unshadowed))
         self.stats["segments"] += len(group)
         self.stats["dispatches"] += 1
         self.stats["padded_segments"] += s_pad - len(group)
@@ -412,6 +564,14 @@ class SweepDispatcher:
     def _harvest(self, inf: _InFlight, block: bool) -> None:
         if block:
             inf.dms.depth.block_until_ready()
+        t_harv = perf_counter()
+        if inf.key is not None:
+            self._sweep_time_hist.observe(inf.dispatched_t, t_harv)
+            self.stats["sweep_time_s"] = self._sweep_time_hist.snapshot()
+            if self.profiler is not None:
+                self.profiler.note_harvest(
+                    inf.key, inf.dispatched_t, t_harv,
+                    unshadowed=inf.unshadowed)
         owners = inf.owners
         if owners is None:
             owners = (self.default_owner,) * len(inf.segs)

@@ -125,6 +125,25 @@ def _assert_stats_reconcile(stats: dict, n_segments: int) -> None:
     assert stats["coalesced_segments"] >= 2 * stats["coalesced_dispatches"]
     assert stats["pending_segments"] == 0, "coalescing queue not drained"
     assert stats["max_pending"] >= 0
+    _assert_hist_reconciles(stats["queue_wait_s"], stats["segments"])
+    _assert_hist_reconciles(stats["sweep_time_s"], stats["dispatches"])
+
+
+def _assert_hist_reconciles(hist: dict, expected_count: int) -> None:
+    """The latency-histogram identities: one sample per event, every
+    sample binned exactly once, and the sum of waits equal to the sum of
+    out-timestamps minus the sum of in-timestamps — a histogram that
+    lost, duplicated, or clock-skewed a sample cannot satisfy all
+    three. (The raw signal the cost recorder consumes; see
+    docs/dispatch_planning.md.)"""
+    assert hist["count"] == expected_count, hist
+    assert sum(hist["bins"]) == hist["count"], hist
+    assert len(hist["bins"]) == len(hist["bin_edges_s"]) + 1
+    assert hist["total_s"] >= 0.0
+    assert 0.0 <= hist["max_s"] <= hist["total_s"] + 1e-12 or hist["count"] == 0
+    # sum of waits == sum of dispatch timestamps - sum of enqueue
+    # timestamps (resp. harvest - dispatch): the reconciliation identity
+    assert abs(hist["total_s"] - (hist["t_out_sum"] - hist["t_in_sum"])) < 1e-6, hist
 
 
 # --- the headline grid ----------------------------------------------------
