@@ -42,6 +42,41 @@ def gaussian_blur(img: Array, sigma: float = 2.0, radius: int = 5) -> Array:
 
 
 @partial(jax.jit, static_argnames=("adaptive_radius",))
+def detect_structure_from(
+    conf: Array,
+    zf: Array,
+    planes: Array,
+    *,
+    threshold_c: float = 6.0,
+    adaptive_sigma: float = 2.5,
+    adaptive_radius: int = 5,
+    min_votes: float = 3.0,
+) -> DepthMap:
+    """Detection tail from a precomputed depth reduction.
+
+    `conf` (h, w) is the depth-axis max of the (stored) DSI and `zf`
+    (h, w) the parabola-refined argmax — exactly what the fused
+    backproject_vote kernel (or `kernels/local_max`) emits. This is the
+    shared back half of `detect_structure`: adaptive Gaussian threshold
+    mask + piecewise-linear depth interpolation between plane centres.
+    Keeping one implementation means the fused-kernel path and the XLA
+    argmax path cannot drift in the post-reduction math.
+    """
+    conf = conf.astype(jnp.float32)
+    zf = zf.astype(jnp.float32)
+    local_mean = gaussian_blur(conf, adaptive_sigma, adaptive_radius)
+    mask = (conf > local_mean + threshold_c) & (conf >= min_votes)
+
+    # interpolate depth between plane centres (piecewise-linear in index)
+    nz = planes.shape[0]
+    z_lo = jnp.clip(jnp.floor(zf).astype(jnp.int32), 0, nz - 1)
+    z_hi = jnp.clip(z_lo + 1, 0, nz - 1)
+    frac = zf - z_lo.astype(jnp.float32)
+    depth = planes[z_lo] * (1.0 - frac) + planes[z_hi] * frac
+    return DepthMap(depth=depth, mask=mask, confidence=conf)
+
+
+@partial(jax.jit, static_argnames=("adaptive_radius",))
 def detect_structure(
     dsi: Array,
     planes: Array,
@@ -61,9 +96,6 @@ def detect_structure(
     conf = jnp.max(dsi_f, axis=0)  # (h, w)
     zidx = jnp.argmax(dsi_f, axis=0)  # (h, w)
 
-    local_mean = gaussian_blur(conf, adaptive_sigma, adaptive_radius)
-    mask = (conf > local_mean + threshold_c) & (conf >= min_votes)
-
     nz = dsi.shape[0]
     if refine_subvoxel:
         zm = jnp.clip(zidx - 1, 0, nz - 1)
@@ -81,12 +113,11 @@ def detect_structure(
     else:
         zf = zidx.astype(jnp.float32)
 
-    # interpolate depth between plane centres (piecewise-linear in index)
-    z_lo = jnp.clip(jnp.floor(zf).astype(jnp.int32), 0, nz - 1)
-    z_hi = jnp.clip(z_lo + 1, 0, nz - 1)
-    frac = zf - z_lo.astype(jnp.float32)
-    depth = planes[z_lo] * (1.0 - frac) + planes[z_hi] * frac
-    return DepthMap(depth=depth, mask=mask, confidence=conf)
+    return detect_structure_from(
+        conf, zf, planes,
+        threshold_c=threshold_c, adaptive_sigma=adaptive_sigma,
+        adaptive_radius=adaptive_radius, min_votes=min_votes,
+    )
 
 
 def detect_and_filter(
@@ -104,6 +135,30 @@ def detect_and_filter(
     between them.
     """
     dm = detect_structure(dsi, planes, threshold_c=threshold_c, min_votes=min_votes)
+    if median_filter:
+        dm = DepthMap(median_filter3(dm.depth, dm.mask), dm.mask, dm.confidence)
+    return dm
+
+
+def detect_and_filter_from(
+    conf: Array,
+    zf: Array,
+    planes: Array,
+    *,
+    threshold_c: float = 6.0,
+    min_votes: float = 3.0,
+    median_filter: bool = True,
+) -> DepthMap:
+    """`detect_and_filter` for callers that already hold (conf, zf).
+
+    The fused backproject_vote kernel performs the depth max/argmax +
+    parabola refinement against the VMEM-resident DSI block; this entry
+    applies the identical post-reduction tail (threshold mask, depth
+    interpolation, optional median), so the fused and unfused sweeps
+    share every instruction after the reduction.
+    """
+    dm = detect_structure_from(conf, zf, planes,
+                               threshold_c=threshold_c, min_votes=min_votes)
     if median_filter:
         dm = DepthMap(median_filter3(dm.depth, dm.mask), dm.mask, dm.confidence)
     return dm

@@ -26,6 +26,19 @@ DSI_STORE_DTYPE = jnp.int16  # paper Table 1: DSI scores, 16-bit integer
 DSI_ACCUM_DTYPE = jnp.int32  # accumulation dtype (saturation-checked on store)
 
 
+def store_clip_bounds() -> tuple[float, float]:
+    """The (min, max) saturating-store clamp as float literals.
+
+    Single source of truth shared by `to_storage` and the fused Pallas
+    kernel's in-VMEM int16 store — and the pair the quantization-contract
+    linter expects as clamp provenance on any float->int16 cast
+    (`EMVSQuantPolicy.sanctioned_clip_bounds()` contains it via the
+    Table-1 'dsi' format).
+    """
+    info = jnp.iinfo(DSI_STORE_DTYPE)
+    return float(info.min), float(info.max)
+
+
 @dataclasses.dataclass(frozen=True)
 class DSIConfig:
     width: int = 240

@@ -69,7 +69,7 @@ import numpy as np
 from repro.core import dsi as dsi_lib
 from repro.core.backproject import FrameGeometry, frame_geometry
 from repro.core.camera import CameraModel
-from repro.core.detection import DepthMap, detect_and_filter
+from repro.core.detection import DepthMap, detect_and_filter, detect_and_filter_from
 from repro.core.dsi import DSIConfig
 from repro.core.geometry import SE3, PlaneSweepCoeffs, apply_homography, propagate_to_planes
 from repro.core.pointcloud import PointCloud, depth_map_to_points, depth_maps_to_points
@@ -107,6 +107,12 @@ class EMVSOptions:
     detection_min_votes: float = 3.0
     median_filter: bool = True
     policy: EMVSQuantPolicy = TABLE1
+    # formulation="kernel" execution mode, resolved in ONE place
+    # (repro.kernels.platform.resolve_interpret): None = compiled on
+    # TPU/GPU with interpreter fallback elsewhere; True = force the
+    # Pallas interpreter; False = require the compiled kernel
+    # (ValueError on platforms without a Pallas compile path).
+    kernel_interpret: bool | None = None
 
 
 class SegmentResult(NamedTuple):
@@ -730,28 +736,46 @@ def sweep_segment_batch(
         if opts.formulation == "kernel":
             from repro.kernels.backproject_vote import ops as bpv_ops
 
-            dsi = bpv_ops.backproject_vote_frames(
+            # Fused datapath: vote, int16 saturating store (when
+            # quantized) and the depth max/argmax reduction all run
+            # in-kernel against the VMEM-resident block — the stored DSI
+            # makes exactly ONE HBM trip and is never read back for
+            # detection (no post-kernel storage_roundtrip here).
+            dsi, conf, zf = bpv_ops.backproject_vote_frames(
                 seg.xy, seg.valid, geoms.H,
                 jnp.stack([geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y],
                           axis=-1),  # (C, Nz, 3)
                 cam=cam, dsi_cfg=dsi_cfg, mode=opts.voting,
                 quantized=opts.quantized, frame_valid=seg.frame_valid,
+                interpret=opts.kernel_interpret,
             )
-        else:
-            dsi0 = jnp.zeros(dsi_cfg.shape, dtype=_accum_dtype(opts))
-
-            def body(dsi, frame):
-                xy, valid, fv, H, alpha, beta_x, beta_y = frame
-                geom = FrameGeometry(H, PlaneSweepCoeffs(alpha, beta_x, beta_y))
-                x_i, y_i = project_frame(cam, xy, geom, opts)
-                return vote_frame(dsi, x_i, y_i, valid * fv, cam, opts), None
-
-            dsi, _ = jax.lax.scan(
-                body,
-                dsi0,
-                (seg.xy, seg.valid, seg.frame_valid, geoms.H,
-                 geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y),
+            if opts.quantized:
+                # widen the int16 stored volume back to the accumulator
+                # dtype so downstream consumers (saturation monitors,
+                # point-cloud weights) see the same dtype as the XLA path
+                dsi = dsi_lib.from_storage(dsi)
+            dm = detect_and_filter_from(
+                conf, zf, planes,
+                threshold_c=opts.detection_threshold_c,
+                min_votes=opts.detection_min_votes,
+                median_filter=opts.median_filter,
             )
+            return dsi, dm
+
+        dsi0 = jnp.zeros(dsi_cfg.shape, dtype=_accum_dtype(opts))
+
+        def body(dsi, frame):
+            xy, valid, fv, H, alpha, beta_x, beta_y = frame
+            geom = FrameGeometry(H, PlaneSweepCoeffs(alpha, beta_x, beta_y))
+            x_i, y_i = project_frame(cam, xy, geom, opts)
+            return vote_frame(dsi, x_i, y_i, valid * fv, cam, opts), None
+
+        dsi, _ = jax.lax.scan(
+            body,
+            dsi0,
+            (seg.xy, seg.valid, seg.frame_valid, geoms.H,
+             geoms.phi.alpha, geoms.phi.beta_x, geoms.phi.beta_y),
+        )
 
         if opts.quantized:
             dsi = dsi_lib.storage_roundtrip(dsi)  # int16 store semantics

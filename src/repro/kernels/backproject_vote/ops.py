@@ -1,4 +1,4 @@
-"""Public jit'd wrapper for the fused backproject+vote kernel."""
+"""Public jit'd wrappers for the fused backproject+vote(+detect) kernel."""
 from __future__ import annotations
 
 from functools import partial
@@ -17,7 +17,8 @@ Array = jax.Array
 
 
 @partial(jax.jit, static_argnames=("cx", "cy", "w", "h", "mode", "block_z",
-                                   "frames_per_step", "onehot_dtype", "interpret"))
+                                   "frames_per_step", "quantized",
+                                   "onehot_dtype", "interpret"))
 def backproject_vote(
     xy0: Array,  # (F, E, 2) canonical coords
     valid: Array,  # (F, E) bool/float
@@ -30,27 +31,66 @@ def backproject_vote(
     mode: str = "nearest",
     block_z: int = 8,
     frames_per_step: int = 1,
+    quantized: bool = False,
     onehot_dtype=None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
-    """DSI (Nz, h, w) float32 from canonical coords (kernel-backed).
+    """DSI (Nz, h, w) from canonical coords (kernel-backed).
+
+    int16 when `quantized` (the in-kernel saturating store), float32
+    otherwise. The fused conf/zf detection outputs are discarded here —
+    use `backproject_vote_detect` to keep them.
 
     One-hot dtype: nearest voting uses bf16 rows (0/1 exact, 2x MXU
     throughput); bilinear defaults to fp32 rows so fractional weights are
     exact — pass bf16 explicitly to trade ~2^-9 weight error for speed.
     """
+    dsi, _, _ = backproject_vote_detect(
+        xy0, valid, phi, cx=cx, cy=cy, w=w, h=h, mode=mode, block_z=block_z,
+        frames_per_step=frames_per_step, quantized=quantized,
+        onehot_dtype=onehot_dtype, interpret=interpret,
+    )
+    return dsi
+
+
+@partial(jax.jit, static_argnames=("cx", "cy", "w", "h", "mode", "block_z",
+                                   "frames_per_step", "quantized",
+                                   "onehot_dtype", "interpret"))
+def backproject_vote_detect(
+    xy0: Array,  # (F, E, 2) canonical coords
+    valid: Array,  # (F, E) bool/float
+    phi: Array,  # (F, Nz, 3)
+    *,
+    cx: float,
+    cy: float,
+    w: int,
+    h: int,
+    mode: str = "nearest",
+    block_z: int = 8,
+    frames_per_step: int = 1,
+    quantized: bool = False,
+    onehot_dtype=None,
+    interpret: bool | None = None,
+) -> tuple[Array, Array, Array]:
+    """Fused sweep from canonical coords: `(dsi, conf, zf)`, all cropped.
+
+    dsi (Nz, h, w) — int16 when `quantized`, else float32; conf/zf (h, w)
+    float32 are the depth-axis max and parabola-refined argmax of the
+    STORED DSI, computed against the VMEM-resident block (no HBM
+    round-trip between store and detection).
+    """
     if onehot_dtype is None:
         onehot_dtype = jnp.bfloat16 if mode == "nearest" else jnp.float32
-    dsi_pad = backproject_vote_pallas(
+    dsi_pad, conf_pad, zf_pad = backproject_vote_pallas(
         xy0[..., 0].astype(jnp.float32),
         xy0[..., 1].astype(jnp.float32),
         valid.astype(jnp.float32),
         phi.astype(jnp.float32),
         cx=cx, cy=cy, w=w, h=h, block_z=block_z,
-        frames_per_step=frames_per_step, mode=mode, onehot_dtype=onehot_dtype,
-        interpret=interpret,
+        frames_per_step=frames_per_step, mode=mode, quantized=quantized,
+        onehot_dtype=onehot_dtype, interpret=interpret,
     )
-    return dsi_pad[:, :h, :w]
+    return dsi_pad[:, :h, :w], conf_pad[:h, :w], zf_pad[:h, :w]
 
 
 def backproject_vote_frames(
@@ -65,14 +105,19 @@ def backproject_vote_frames(
     quantized: bool = False,
     block_z: int = 8,
     frames_per_step: int = 1,
-    interpret: bool = True,
+    interpret: bool | None = None,
     frame_valid: Array | None = None,  # (F,) 1/0 — padded frames vote weight 0
-) -> Array:
-    """Full P + R for a frame batch: P(Z0) in XLA, fused kernel for the rest.
+) -> tuple[Array, Array, Array]:
+    """Full P + R + store + detect for a frame batch: `(dsi, conf, zf)`.
 
     Mirrors the FPGA module split: the Canonical Projection Module
     (homography + normalization) is a cheap batched op; the Proportional
-    Projection Module (the hot loop) is the Pallas kernel.
+    Projection Module plus the vote/store/detect datapath (the hot loop)
+    is the fused Pallas kernel. Under `quantized` the Table-1 contract is
+    applied end to end — including the int8 plane-coord quantization
+    (in-kernel, matching `project_frame`) and the int16 saturating DSI
+    store (in-kernel, so the stored volume makes exactly one HBM trip and
+    detection reads the VMEM-resident block, never HBM).
 
     `frame_valid` supports the padded batched segment sweep: segments are
     padded to a fixed frame capacity, and padded frames (repeats of a real
@@ -89,11 +134,11 @@ def backproject_vote_frames(
     xy0 = jax.vmap(apply_homography)(H, xy)
     if quantized:
         xy0 = TABLE1.quantize_canonical(xy0)
-    return backproject_vote(
+    return backproject_vote_detect(
         xy0, valid, phi,
         cx=cam.cx, cy=cam.cy, w=cam.width, h=cam.height,
         mode=mode, block_z=block_z, frames_per_step=frames_per_step,
-        interpret=interpret,
+        quantized=quantized, interpret=interpret,
     )
 
 
@@ -124,10 +169,14 @@ def kernel_trace_spec(
 ):
     """Traceable kernel entry for `repro.analysis`: `(fn, args, contracts)`.
 
-    Stages `backproject_vote_frames` — including the Pallas kernel body —
-    on `ShapeDtypeStruct` inputs so `jax.make_jaxpr` can walk it without
+    Stages `backproject_vote_frames` — including the FUSED Pallas kernel
+    body (vote accumulate, int8 plane-coord quantization, in-kernel
+    float->int16 saturating store, detection reduction) — on
+    `ShapeDtypeStruct` inputs so `jax.make_jaxpr` can walk it without
     executing. The interpreter recurses into the `pallas_call` equation
-    and checks the same float->int contracts inside the kernel.
+    and checks the same float->int contracts inside the kernel: the
+    in-VMEM int16 store must carry clamp provenance matching
+    `EMVSQuantPolicy.sanctioned_clip_bounds()`.
     """
     f, e, nz = frames, events, dsi_cfg.num_planes
     f32 = jnp.float32

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
-@partial(jax.jit, static_argnames=("w", "h", "mode"))
+@partial(jax.jit, static_argnames=("w", "h", "mode", "quantize_plane_coords"))
 def backproject_vote_ref(
     xy0: Array,  # (F, E, 2) float32 canonical coords
     valid: Array,  # (F, E) bool or float
@@ -33,7 +33,13 @@ def backproject_vote_ref(
     w: int,
     h: int,
     mode: str = "nearest",
+    quantize_plane_coords: bool = False,
 ) -> Array:
+    """`quantize_plane_coords` applies the Table-1 int8 plane-coord
+    contract (via the policy object itself, NOT the kernel's in-body
+    replica — so kernel-vs-ref tests cross-check the two
+    implementations) before the vote sanitize, mirroring the quantized
+    nearest datapath of `pipeline.project_frame`."""
     F, E, _ = xy0.shape
     nz = phi.shape[1]
 
@@ -42,6 +48,10 @@ def backproject_vote_ref(
         alpha, beta_x, beta_y = ph[:, 0], ph[:, 1], ph[:, 2]
         x_i = alpha[:, None] * (xy[None, :, 0] - cx) + beta_x[:, None] + cx
         y_i = alpha[:, None] * (xy[None, :, 1] - cy) + beta_y[:, None] + cy
+        if quantize_plane_coords:
+            from repro.quant.policies import TABLE1
+
+            x_i, y_i = TABLE1.quantize_plane_coords(x_i, y_i)
         x_i = jnp.clip(jnp.where(jnp.isfinite(x_i), x_i, -1e6), -1e6, 1e6)
         y_i = jnp.clip(jnp.where(jnp.isfinite(y_i), y_i, -1e6), -1e6, 1e6)
         vf = v.astype(jnp.float32)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.platform import resolve_interpret
+
 Array = jax.Array
 
 NEG_INF = -1e30
@@ -105,7 +107,7 @@ def flash_attention_pallas(
     block_q: int = 128,
     block_k: int = 128,
     q_per_kv: int = 1,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     bh, sq, d = q.shape
     skv = k.shape[1]
@@ -140,5 +142,5 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, stats), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

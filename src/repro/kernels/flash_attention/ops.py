@@ -20,7 +20,7 @@ def flash_attention(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Array:
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]

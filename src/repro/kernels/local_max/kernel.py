@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import resolve_interpret
+
 Array = jax.Array
 
 LANE = 128
@@ -70,7 +72,8 @@ def _kernel(dsi_ref, conf_ref, zf_ref, *, nz: int):
 
 @functools.partial(jax.jit, static_argnames=("tile_h", "tile_w", "interpret"))
 def depth_argmax_pallas(
-    dsi: Array, *, tile_h: int = 8, tile_w: int = 128, interpret: bool = True
+    dsi: Array, *, tile_h: int = 8, tile_w: int = 128,
+    interpret: bool | None = None,
 ) -> tuple[Array, Array]:
     """dsi (Nz, h, w) -> (conf (h,w), zf (h,w)). h, w padded to tiles."""
     nz, h, w = dsi.shape
@@ -91,6 +94,6 @@ def depth_argmax_pallas(
             jax.ShapeDtypeStruct((h_pad, w_pad), jnp.float32),
             jax.ShapeDtypeStruct((h_pad, w_pad), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(dsi)
     return conf[:h, :w], zf[:h, :w]

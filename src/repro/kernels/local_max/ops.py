@@ -8,6 +8,12 @@ from repro.kernels.local_max.kernel import depth_argmax_pallas
 Array = jax.Array
 
 
-def depth_argmax(dsi: Array, *, interpret: bool = True) -> tuple[Array, Array]:
-    """Fused (conf, refined argmax) over the depth axis of a DSI."""
+def depth_argmax(dsi: Array, *, interpret: bool | None = None
+                 ) -> tuple[Array, Array]:
+    """Fused (conf, refined argmax) over the depth axis of a DSI.
+
+    `interpret=None` is the capability-probed default (compiled on
+    TPU/GPU, interpreter elsewhere); `interpret=False` raises on
+    platforms without a Pallas compile path.
+    """
     return depth_argmax_pallas(dsi, interpret=interpret)

@@ -1,0 +1,50 @@
+"""Single decision point for interpret-vs-compiled Pallas execution.
+
+Every Pallas wrapper in `repro.kernels` takes `interpret: bool | None`
+and resolves it HERE, so exactly one place in the tree decides whether a
+kernel runs compiled (Mosaic/Triton lowering on TPU/GPU) or under the
+Pallas interpreter (everywhere else, e.g. the CPU CI leg):
+
+  * `interpret=None`  — capability-probed default: compiled on TPU/GPU,
+    interpreter fallback elsewhere. This is what production call sites
+    (`sweep_segment_batch`, the streaming dispatcher) pass through from
+    `EMVSOptions.kernel_interpret` / `StreamConfig.kernel_interpret`.
+  * `interpret=True`  — force the interpreter (tests pin this for
+    bitwise interpret-vs-compiled parity checks).
+  * `interpret=False` — force the compiled kernel; raises `ValueError`
+    on a platform without a Pallas compile path rather than silently
+    falling back to the interpreter, so a serving config that *believes*
+    it is running the fused compiled kernel cannot quietly run the
+    ~100x-slower interpreted one.
+"""
+from __future__ import annotations
+
+import jax
+
+# Backends with a Pallas compile path (Mosaic on TPU, Triton on GPU).
+_COMPILED_BACKENDS = ("tpu", "gpu")
+
+
+def compiled_kernels_supported() -> bool:
+    """True iff the default JAX backend can lower `pallas_call` natively."""
+    return jax.default_backend() in _COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a tri-state `interpret` knob to the concrete pallas flag.
+
+    None  -> probed default (compiled where supported, else interpreter)
+    True  -> interpreter, always
+    False -> compiled; ValueError if the platform cannot compile Pallas
+    """
+    if interpret is None:
+        return not compiled_kernels_supported()
+    if interpret is False and not compiled_kernels_supported():
+        raise ValueError(
+            "interpret=False requests the compiled Pallas kernel, but the "
+            f"active JAX backend {jax.default_backend()!r} has no Pallas "
+            "compile path (supported: tpu, gpu). Pass interpret=None for "
+            "the capability-probed default or interpret=True to force the "
+            "interpreter."
+        )
+    return bool(interpret)

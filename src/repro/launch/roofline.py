@@ -187,3 +187,84 @@ def model_flops_for_cell(cfg, cell) -> float:
         flops += (4.0 * cfg.n_heads * cfg.head_dim * cell.seq_len
                   * n_attn_layers * tokens)
     return flops
+
+
+# ---------------------------------------------------------------------------
+# EMVS sweep fusion ladder (analytic)
+#
+# The fused Pallas sweep cannot be costed from compiled HLO on the CPU CI
+# leg (the interpreter lowers to scalar loops with meaningless traffic),
+# so the kernel-fusion win is modeled analytically from first principles:
+# every term is a tensor the stage MUST move through HBM, at its contract
+# dtype width (docs/quantization_contracts.md). FLOPs are identical across
+# stages — fusion only deletes data movement — so each rung strictly
+# raises arithmetic intensity and strictly shrinks the modeled time's
+# distance to the compute roofline bound.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SweepStageRoofline:
+    """One rung of the fusion ladder under the two-term roofline."""
+
+    name: str
+    hbm_bytes: float
+    flops: float
+    compute_s: float
+    memory_s: float
+    time_s: float  # max(compute, memory); single-chip sweep, no collectives
+    intensity: float  # flops / hbm_bytes
+    bound_gap: float  # time_s / compute_s; 1.0 == sitting on the roofline
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def emvs_fusion_ladder(*, nz: int, h: int, w: int, events: int, frames: int,
+                       quantized: bool = True) -> list[SweepStageRoofline]:
+    """Model the three fusion stages of one quantized sweep dispatch.
+
+    unfused        — the pre-fusion pipeline: the vote kernel writes a
+                     float32 DSI to HBM, ``storage_roundtrip`` reads it
+                     back and re-writes it int16 (Table-1 store), and
+                     detection reads the whole stored volume once more.
+    fused-store    — the saturating int16 store runs in-VMEM against the
+                     resident block: the float32 spill and the roundtrip
+                     read disappear; detection still re-reads the volume.
+    fused-detect   — detection's streaming argmax consumes each stored
+                     plane while it is still VMEM-resident, so the DSI is
+                     written exactly once and never read back.
+    """
+    f32, i16 = 4.0, 2.0
+    store = i16 if quantized else f32
+    vox = float(nz) * h * w
+    # tensors every stage reads exactly once, at contract dtype widths
+    inputs = frames * events * (2 * f32 + f32) + frames * nz * 3 * f32
+    outputs = 2.0 * h * w * f32  # conf + zf maps
+    # identical math on every rung: projection (~10 flop/event/plane),
+    # one-hot vote matmuls (2EH + 2EW MACs per plane per frame), and the
+    # streaming argmax + parabola (~6 flop/voxel)
+    flops = (frames * nz * events * 10.0
+             + frames * nz * 2.0 * events * (h + w)
+             + vox * 6.0)
+
+    def rung(name: str, traffic: float) -> SweepStageRoofline:
+        hbm = inputs + outputs + traffic
+        compute_s = flops / PEAK_FLOPS
+        memory_s = hbm / HBM_BW
+        time_s = max(compute_s, memory_s)
+        return SweepStageRoofline(
+            name=name, hbm_bytes=hbm, flops=flops, compute_s=compute_s,
+            memory_s=memory_s, time_s=time_s, intensity=flops / hbm,
+            bound_gap=time_s / compute_s,
+        )
+
+    if quantized:
+        unfused = vox * (f32 + f32 + store + store)  # spill, re-read, store, detect-read
+    else:
+        unfused = vox * (f32 + f32)  # spill + detect re-read (no roundtrip)
+    return [
+        rung("unfused", unfused),
+        rung("fused-store", vox * (store + store)),
+        rung("fused-detect", vox * store),
+    ]

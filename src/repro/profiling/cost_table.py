@@ -20,8 +20,28 @@ COST_TABLE_SCHEMA_VERSION = 1
 
 COST_TABLE_JSON = "cost_table.json"
 
-_BACKENDS = ("batched", "sharded")
+# The backend axis is "{sweep}" for the default matmul formulation and
+# "{sweep}+{formulation}" otherwise — the voting formulation selects a
+# distinct compiled program (the fused Pallas kernel most importantly),
+# so it must be a cost-table key axis or the DispatchPlanner would price
+# the fused kernel sweep with matmul-sweep timings.
+_SWEEPS = ("batched", "sharded")
+_FORMULATION_SUFFIXES = ("", "+scatter", "+kernel")
+_BACKENDS = tuple(s + f for s in _SWEEPS for f in _FORMULATION_SUFFIXES)
 _INTERPOLATIONS = ("nearest", "bilinear")
+
+
+def backend_name(sweep: str, formulation: str = "matmul") -> str:
+    """Canonical VariantKey.backend for a (sweep, formulation) pair."""
+    if sweep not in _SWEEPS:
+        raise CostTableError(f"sweep must be one of {_SWEEPS}, got {sweep!r}")
+    if formulation == "matmul":
+        return sweep
+    name = f"{sweep}+{formulation}"
+    if name not in _BACKENDS:
+        raise CostTableError(
+            f"unknown formulation {formulation!r} (no backend {name!r})")
+    return name
 
 
 class CostTableError(ValueError):

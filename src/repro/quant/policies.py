@@ -47,6 +47,19 @@ class EMVSQuantPolicy:
             beta_y=quantize_roundtrip(phi.beta_y, self.phi),
         )
 
+    def quantize_plane_coord_values(self, c: Array) -> Array:
+        """Elementwise int8 plane-coord quantization (one coordinate axis).
+
+        Exposed separately from `quantize_plane_coords` because the fused
+        Pallas sweep applies it INSIDE the kernel body (per depth plane,
+        against VMEM-resident coords) — same traced ops as the XLA
+        datapath, so the two formulations agree bitwise by construction.
+        """
+        fmt = self.plane_coords
+        park = jnp.float32(fmt.q_max)
+        out_of_range = (c < -0.5) | (c > fmt.q_max + 0.5)
+        return jnp.where(out_of_range, park, quantize_roundtrip(c, fmt))
+
     def quantize_plane_coords(self, x_i: Array, y_i: Array) -> tuple[Array, Array]:
         """Nearest-voxel rounding to 8-bit pixel index.
 
@@ -57,13 +70,7 @@ class EMVSQuantPolicy:
         fabricate votes; the park-at-max rule mirrors the FPGA's Nearest
         Voxel Finder doing the miss-judgement before address generation.
         """
-        fmt = self.plane_coords
-        park = jnp.float32(fmt.q_max)
-
-        def q(c: Array) -> Array:
-            out_of_range = (c < -0.5) | (c > fmt.q_max + 0.5)
-            return jnp.where(out_of_range, park, quantize_roundtrip(c, fmt))
-
+        q = self.quantize_plane_coord_values
         return q(x_i), q(y_i)
 
     # -- contract declarations for repro.analysis ------------------------

@@ -299,6 +299,16 @@ class StreamConfig:
     # room; "reject" = raise MemoryBudgetError with the frames buffered
     # first (recover via poll/flush).
     budget_policy: str = "stall"
+    # Interpret/compiled override for EMVSOptions(formulation="kernel")
+    # sweeps, threaded through the dispatcher into the fused Pallas
+    # kernel and resolved in ONE place
+    # (repro.kernels.platform.resolve_interpret): None = leave
+    # EMVSOptions.kernel_interpret as configured (itself defaulting to
+    # compiled-on-TPU/GPU, interpreter elsewhere); True = force the
+    # interpreter; False = require the compiled kernel (ValueError on
+    # platforms without a Pallas compile path — never a silent
+    # interpreter fallback).
+    kernel_interpret: bool | None = None
 
     def __post_init__(self):
         if not self.segment_buckets:

@@ -91,7 +91,8 @@ class _LatencyHist:
 
 
 def enumerate_variant_space(stream_cfg, max_segment_frames: int, *,
-                            mesh_segments: int = 1) -> dict:
+                            mesh_segments: int = 1,
+                            formulation: str = "matmul") -> dict:
     """Statically enumerate the dispatcher's compiled-variant space.
 
     Every sweep the dispatcher can stage has its entry shapes determined
@@ -101,8 +102,12 @@ def enumerate_variant_space(stream_cfg, max_segment_frames: int, *,
     pure function of config, so `repro.analysis`'s recompilation audit
     can verify the |S buckets| x |capacities| jit-cache bound without
     constructing an engine. Returns `{"s_buckets", "capacities",
-    "variants"}` with `variants` the full (s_bucket, capacity) product.
+    "variants", "backend"}` with `variants` the full (s_bucket, capacity)
+    product and `backend` the cost-table backend axis value
+    (`cost_table.backend_name`) the dispatcher would key these variants
+    under — "batched+kernel" etc. for the non-default formulations.
     """
+    from repro.profiling.cost_table import backend_name
     from repro.core.pipeline import bucket_capacity
 
     if max_segment_frames <= 0:
@@ -118,7 +123,8 @@ def enumerate_variant_space(stream_cfg, max_segment_frames: int, *,
                                for f in range(1, max_segment_frames + 1)}))
     variants = tuple((s, c) for s in s_buckets for c in capacities)
     return {"s_buckets": s_buckets, "capacities": capacities,
-            "variants": variants}
+            "variants": variants,
+            "backend": backend_name(stream_cfg.sweep, formulation)}
 
 
 class _InFlight(NamedTuple):
@@ -164,6 +170,13 @@ class SweepDispatcher:
             stream_cfg = StreamConfig()
         self.cam = cam
         self.dsi_cfg = dsi_cfg
+        if getattr(stream_cfg, "kernel_interpret", None) is not None:
+            # serving-level interpret/compiled override for the fused
+            # kernel formulation; EMVSOptions stays the single source the
+            # sweep body reads (and jit keys on — both are static/hashable)
+            import dataclasses as _dc
+
+            opts = _dc.replace(opts, kernel_interpret=stream_cfg.kernel_interpret)
         self.opts = opts
         self.stream_cfg = stream_cfg
         if stream_cfg.sweep == "sharded":
@@ -235,10 +248,19 @@ class SweepDispatcher:
 
     def _variant_key(self, s_bucket: int, capacity: int) -> VariantKey:
         """The compiled-variant identity of a padded dispatch shape —
-        the cost table's key axes (repro.profiling.cost_table)."""
+        the cost table's key axes (repro.profiling.cost_table).
+
+        The backend axis folds in the voting formulation
+        (`backend_name`): "batched" is the default matmul program,
+        "batched+kernel" the fused Pallas sweep, etc. — distinct compiled
+        programs with very different costs, so the DispatchPlanner must
+        price them separately."""
+        from repro.profiling.cost_table import backend_name
+
         return VariantKey(
             s_bucket=s_bucket, capacity=capacity,
-            backend=self.stream_cfg.sweep,
+            backend=backend_name(self.stream_cfg.sweep,
+                                 self.opts.formulation),
             interpolation=self.opts.voting,
             quantized=self.opts.quantized)
 

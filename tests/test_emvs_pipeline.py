@@ -50,14 +50,35 @@ def test_formulations_agree(cam, dsi_cfg, small_scene):
                    np.asarray(dm.mask))
     np.testing.assert_allclose(outs["scatter"][0], outs["matmul"][0], atol=1e-3)
     assert (outs["scatter"][2] == outs["matmul"][2]).all()
-    # kernel path: same math, but vmap-vs-scan fp association can flip a
-    # coordinate sitting exactly on a .5 pixel boundary by 1 ulp -> the
-    # vote lands one pixel over. Require vote conservation + rare flips.
-    a, b = outs["matmul"][0], outs["kernel"][0]
-    assert a.sum() == b.sum(), "votes must be conserved"
-    frac = (a != b).mean()
-    assert frac < 1e-5, f"boundary-flip fraction {frac} too high"
-    assert (outs["matmul"][2] == outs["kernel"][2]).mean() > 0.9999
+    # fused kernel path on the integer (nearest) datapath: bitwise —
+    # votes are integral f32 accumulations, and the in-kernel projection
+    # now runs the same traced ops as project_frame.
+    np.testing.assert_array_equal(outs["matmul"][0], outs["kernel"][0])
+    np.testing.assert_array_equal(outs["matmul"][1], outs["kernel"][1])
+    np.testing.assert_array_equal(outs["matmul"][2], outs["kernel"][2])
+
+
+@pytest.mark.parametrize("voting", ["nearest", "bilinear"])
+def test_formulations_agree_quantized(cam, dsi_cfg, small_scene, voting):
+    """Regression for the headline divergence bug: under quantized=True
+    the kernel path used to skip the Table-1 int8 plane-coord
+    quantization that project_frame applies, silently shifting votes.
+    The quantized datapath is integer end-to-end (int16 store), so all
+    three formulations must agree BITWISE — including depth and mask."""
+    frames = _first_segment(small_scene["frames"])
+    T_w_ref = SE3(frames.poses.R[0], frames.poses.t[0])
+    outs = {}
+    for f in ("scatter", "matmul", "kernel"):
+        dsi, dm = process_segment(
+            cam, dsi_cfg, frames, T_w_ref,
+            EMVSOptions(formulation=f, voting=voting, quantized=True))
+        outs[f] = (np.asarray(dsi, np.float32), np.asarray(dm.depth),
+                   np.asarray(dm.mask))
+    for other in ("scatter", "kernel"):
+        for i, what in enumerate(("dsi", "depth", "mask")):
+            np.testing.assert_array_equal(
+                outs["matmul"][i], outs[other][i],
+                err_msg=f"{other} vs matmul diverges on {what} ({voting})")
 
 
 def test_nearest_vs_bilinear_gap_small(cam, dsi_cfg, small_scene):

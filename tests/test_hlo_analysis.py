@@ -152,3 +152,99 @@ def test_batched_sweep_stored_dsi_bytes_match_quant_policy():
 def test_sharded_sweep_stored_dsi_bytes_match_quant_policy():
     hlo_bytes, predicted = _stored_dsi_bytes_of_lowered_sweep("sharded")
     assert hlo_bytes == predicted != 0
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel store contract: under quantized=True + formulation="kernel"
+# the int16 DSI must be produced INSIDE the pallas_call (in-VMEM saturating
+# store) with NO post-kernel storage_roundtrip left in the program.
+# ---------------------------------------------------------------------------
+
+
+def _walk_eqns(jaxpr, in_pallas=False):
+    """Yield (eqn, in_pallas) over a jaxpr and every nested sub-jaxpr."""
+    from jax._src import core as jcore
+
+    for eqn in jaxpr.eqns:
+        yield eqn, in_pallas
+        inside = in_pallas or eqn.primitive.name == "pallas_call"
+        for val in eqn.params.values():
+            subs = val if isinstance(val, (tuple, list)) else (val,)
+            for sub in subs:
+                if isinstance(sub, jcore.ClosedJaxpr):
+                    yield from _walk_eqns(sub.jaxpr, inside)
+                elif isinstance(sub, jcore.Jaxpr):
+                    yield from _walk_eqns(sub, inside)
+
+
+def _int16_convert_census(formulation: str):
+    """(converts-to-int16 outside pallas, inside pallas, pallas has s16 out)."""
+    from repro.core.camera import CameraModel
+    from repro.core.dsi import DSIConfig
+    from repro.core.pipeline import EMVSOptions, sweep_trace_spec
+
+    cam = CameraModel(width=32, height=24, cx=15.5, cy=11.5)
+    dsi_cfg = DSIConfig.for_camera(cam, num_planes=8)
+    opts = EMVSOptions(voting="nearest", formulation=formulation,
+                       quantized=True, kernel_interpret=True)
+    fn, args, _ = sweep_trace_spec(cam, dsi_cfg, opts, segments=1,
+                                   capacity=4, events=16)
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+
+    outside = inside = 0
+    pallas_s16_out = False
+    for eqn, in_pallas in _walk_eqns(jaxpr):
+        if eqn.primitive.name == "pallas_call":
+            for ov in eqn.outvars:
+                if (ov.aval.dtype == jnp.int16 and ov.aval.ndim >= 3):
+                    pallas_s16_out = True
+        if eqn.primitive.name == "convert_element_type":
+            if eqn.params.get("new_dtype") == jnp.int16:
+                if in_pallas:
+                    inside += 1
+                else:
+                    outside += 1
+    return outside, inside, pallas_s16_out
+
+
+def test_quantized_kernel_sweep_stores_int16_in_vmem_no_roundtrip():
+    outside, inside, pallas_s16 = _int16_convert_census("kernel")
+    assert pallas_s16, "pallas_call must emit the int16 DSI directly"
+    assert inside >= 1, "fused saturating store missing from kernel body"
+    assert outside == 0, (
+        f"{outside} float->int16 convert(s) outside the pallas body: the "
+        "quantized kernel path has regrown a post-kernel HBM storage "
+        "round-trip")
+
+
+def test_quantized_matmul_sweep_still_roundtrips_outside():
+    """Positive control: the unfused XLA formulation stores via the
+    explicit storage_roundtrip, so the census must see it (proves the
+    detector in the test above can actually catch a regression)."""
+    outside, inside, pallas_s16 = _int16_convert_census("matmul")
+    assert outside >= 1 and inside == 0 and not pallas_s16
+
+
+def test_emvs_fusion_ladder_strictly_closer_to_bound():
+    """Acceptance gate: every fusion rung sits strictly closer to the
+    roofline bound than the previous one, with identical flops (fusion
+    only deletes HBM traffic)."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "benchmarks"))
+    try:
+        from roofline_report import fusion_report
+    finally:
+        sys.path.pop(0)
+
+    rep = fusion_report()
+    assert rep["violations"] == []
+    names = [s["name"] for s in rep["stages"]]
+    assert names == ["unfused", "fused-store", "fused-detect"]
+    gaps = [s["bound_gap"] for s in rep["stages"]]
+    hbm = [s["hbm_bytes"] for s in rep["stages"]]
+    assert gaps[0] > gaps[1] > gaps[2] >= 1.0
+    assert hbm[0] > hbm[1] > hbm[2]
+    assert len({s["flops"] for s in rep["stages"]}) == 1

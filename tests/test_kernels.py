@@ -28,6 +28,17 @@ def _bpv_inputs(rng, F, E, NZ):
     return xy0, valid, phi
 
 
+def _run_fused(xy0, valid, phi, *, mode, BZ=8, FS=1, quantized=False,
+               onehot_dtype=jnp.float32, interpret=True):
+    """Run the fused kernel; returns cropped (dsi f32, conf, zf) + pads."""
+    dsi_pad, conf_pad, zf_pad = backproject_vote_pallas(
+        xy0[..., 0], xy0[..., 1], valid, phi, cx=CX, cy=CY, w=W, h=H,
+        block_z=BZ, frames_per_step=FS, mode=mode, quantized=quantized,
+        onehot_dtype=onehot_dtype, interpret=interpret)
+    return (dsi_pad[:, :H, :W].astype(jnp.float32), conf_pad[:H, :W],
+            zf_pad[:H, :W], dsi_pad)
+
+
 @pytest.mark.parametrize("mode", ["nearest", "bilinear"])
 @pytest.mark.parametrize("F,E,NZ,BZ,FS", [
     (2, 64, 8, 4, 1),
@@ -39,16 +50,143 @@ def test_backproject_vote_kernel_vs_ref(mode, F, E, NZ, BZ, FS):
     xy0, valid, phi = _bpv_inputs(rng, F, E, NZ)
     ref = backproject_vote_ref(xy0, valid, phi, cx=CX, cy=CY, w=W, h=H,
                                mode=mode)
-    dsi_pad = backproject_vote_pallas(
-        xy0[..., 0], xy0[..., 1], valid, phi, cx=CX, cy=CY, w=W, h=H,
-        block_z=BZ, frames_per_step=FS, mode=mode,
-        onehot_dtype=jnp.float32, interpret=True)
-    got = dsi_pad[:, :H, :W]
+    got, conf, zf, dsi_pad = _run_fused(xy0, valid, phi, mode=mode, BZ=BZ,
+                                        FS=FS)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=1e-3, rtol=1e-5)
     # padding region must never receive votes (miss-judgement correctness)
-    assert float(jnp.sum(dsi_pad[:, H:, :])) == 0.0
-    assert float(jnp.sum(dsi_pad[:, :, W:])) == 0.0
+    assert float(jnp.sum(dsi_pad[:, H:, :].astype(jnp.float32))) == 0.0
+    assert float(jnp.sum(dsi_pad[:, :, W:].astype(jnp.float32))) == 0.0
+    # fused detection outputs must match the local_max oracle on the
+    # kernel's own stored DSI (streaming argmax crossing z-block bounds)
+    conf_r, zf_r = depth_argmax_ref(got)
+    np.testing.assert_array_equal(np.asarray(conf), np.asarray(conf_r))
+    np.testing.assert_array_equal(np.asarray(zf), np.asarray(zf_r))
+
+
+@pytest.mark.parametrize("mode", ["nearest", "bilinear"])
+def test_backproject_vote_kernel_vs_ref_quantized(mode):
+    """Quantized fused path vs the oracle with the SAME Table-1 plane-coord
+    contract (the headline divergence bug: the kernel used to skip the
+    int8 plane-coord quantization entirely)."""
+    from repro.core.dsi import storage_roundtrip
+
+    rng = np.random.default_rng(42)
+    F, E, NZ, BZ = 4, 128, 16, 8
+    xy0, valid, phi = _bpv_inputs(rng, F, E, NZ)
+    ref = backproject_vote_ref(
+        xy0, valid, phi, cx=CX, cy=CY, w=W, h=H, mode=mode,
+        quantize_plane_coords=(mode == "nearest"))
+    ref_stored = storage_roundtrip(ref)  # truncating int16 store semantics
+    got, conf, zf, _ = _run_fused(xy0, valid, phi, mode=mode, BZ=BZ,
+                                  quantized=True)
+    assert got.dtype == jnp.float32  # helper widens the int16 output
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref_stored, np.float32))
+    conf_r, zf_r = depth_argmax_ref(got)
+    np.testing.assert_array_equal(np.asarray(conf), np.asarray(conf_r))
+    np.testing.assert_array_equal(np.asarray(zf), np.asarray(zf_r))
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_backproject_vote_all_frames_invalid(quantized):
+    """Every frame fully padded (valid=0): the DSI must be exactly zero
+    and the fused detection must still agree with the oracle on the
+    all-zero volume (degenerate argmax + parabola at plane 0)."""
+    rng = np.random.default_rng(7)
+    F, E, NZ = 3, 64, 8
+    xy0, _, phi = _bpv_inputs(rng, F, E, NZ)
+    valid = jnp.zeros((F, E), jnp.float32)
+    got, conf, zf, dsi_pad = _run_fused(xy0, valid, phi, mode="nearest",
+                                        quantized=quantized)
+    assert float(jnp.sum(jnp.abs(dsi_pad.astype(jnp.float32)))) == 0.0
+    conf_r, zf_r = depth_argmax_ref(got)
+    np.testing.assert_array_equal(np.asarray(conf), np.asarray(conf_r))
+    np.testing.assert_array_equal(np.asarray(zf), np.asarray(zf_r))
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_backproject_vote_boundary_events(quantized):
+    """Boundary-event grid: events exactly ON w-1/h-1, exact half-integer
+    coordinates (half-away vs half-up rounding seam), one fully-padded
+    frame, and frames_per_step > 1 — all against the oracle."""
+    F, E, NZ, BZ, FS = 4, 16, 8, 4, 2
+    # alpha=1, beta=0: plane coords = canonical coords for every plane
+    phi = jnp.concatenate([jnp.ones((F, NZ, 1)), jnp.zeros((F, NZ, 2))], -1)
+    specials = np.array([
+        [W - 1.0, H - 1.0],   # exactly the last valid pixel
+        [W - 1.0, 0.0],
+        [0.0, H - 1.0],
+        [W - 0.5, H - 0.5],   # rounds to (W, H): out of bounds, dropped
+        [W - 1.5, H - 1.5],   # half-integer: rounds UP to (W-1, H-1)
+        [0.5, 0.5],           # half-integer at the origin -> (1, 1)
+        [-0.5, -0.5],         # exact -0.5: rounds to 0 in BOTH datapaths
+        [-0.51, 7.0],         # just outside: dropped (park-at-max if quant)
+        [0.49, 0.51],
+        [W + 100.0, 3.0],     # far out: dropped
+        [3.0, H + 100.0],
+        [7.25, 7.75],
+        [W - 1.25, H - 1.75],
+        [13.5, 2.5],          # more half-integers across the tile
+        [2.5, 13.5],
+        [0.0, 0.0],
+    ], dtype=np.float32)
+    xy0 = jnp.asarray(np.tile(specials[None], (F, 1, 1)))
+    valid = jnp.ones((F, E), jnp.float32)
+    # frame 3 fully padded (valid = 0 everywhere): must contribute nothing
+    valid = valid.at[3].set(0.0)
+    for mode in ("nearest", "bilinear"):
+        ref = backproject_vote_ref(
+            xy0, valid, phi, cx=CX, cy=CY, w=W, h=H, mode=mode,
+            quantize_plane_coords=(quantized and mode == "nearest"))
+        if quantized:
+            from repro.core.dsi import storage_roundtrip
+
+            ref = storage_roundtrip(ref)
+        got, conf, zf, dsi_pad = _run_fused(
+            xy0, valid, phi, mode=mode, BZ=BZ, FS=FS, quantized=quantized)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref, np.float32))
+        assert float(jnp.sum(dsi_pad[:, H:, :].astype(jnp.float32))) == 0.0
+        assert float(jnp.sum(dsi_pad[:, :, W:].astype(jnp.float32))) == 0.0
+
+
+def test_backproject_vote_interpret_vs_compiled_parity():
+    """Bitwise interpret-vs-compiled parity — only meaningful where a
+    Pallas compile path exists (TPU/GPU); skipped on CPU CI."""
+    from repro.kernels.platform import compiled_kernels_supported
+
+    if not compiled_kernels_supported():
+        pytest.skip("no Pallas compile path on this platform")
+    rng = np.random.default_rng(3)
+    xy0, valid, phi = _bpv_inputs(rng, 2, 128, 8)
+    for quantized in (False, True):
+        a = _run_fused(xy0, valid, phi, mode="nearest", quantized=quantized,
+                       interpret=True)
+        b = _run_fused(xy0, valid, phi, mode="nearest", quantized=quantized,
+                       interpret=False)
+        for x, y in zip(a[:3], b[:3]):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resolve_interpret_contract():
+    """The single decision point: None probes the platform, False raises
+    (never silently falls back) where compiled Pallas is unavailable."""
+    from repro.kernels.platform import compiled_kernels_supported, resolve_interpret
+
+    assert resolve_interpret(True) is True
+    if compiled_kernels_supported():
+        assert resolve_interpret(None) is False
+        assert resolve_interpret(False) is False
+    else:
+        assert resolve_interpret(None) is True
+        with pytest.raises(ValueError, match="no Pallas compile path"):
+            resolve_interpret(False)
+        with pytest.raises(ValueError):
+            backproject_vote_pallas(
+                jnp.zeros((1, 8)), jnp.zeros((1, 8)), jnp.ones((1, 8)),
+                jnp.ones((1, 8, 3)), cx=CX, cy=CY, w=W, h=H, block_z=8,
+                interpret=False)
 
 
 def test_backproject_vote_wrapper_matches_pipeline_votes(cam):
